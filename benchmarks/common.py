@@ -1,0 +1,25 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / iters
+    return dt, out
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def section(title: str):
+    print(f"\n# === {title} ===")

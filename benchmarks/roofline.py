@@ -1,0 +1,150 @@
+"""Roofline analysis over the dry-run artifacts (assignment §Roofline).
+
+Reads results/dryrun/*.json (written by `python -m repro.launch.dryrun`)
+and derives, per (arch × shape × mesh):
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+  memory term     = HLO_bytes_per_device / HBM_bw             [s]
+  collective term = collective_wire_bytes_per_device / ICI_bw [s]
+
+plus MODEL_FLOPS (6·N_active·D train / 2·N_active·D forward) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs. HLO numbers come from the
+loop-aware walker (launch/hlo_analysis.py) over the post-SPMD module, so
+scan trip counts are fully accounted.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--tag baseline]
+Writes results/roofline_<tag>.md and prints the table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import SHAPES
+from repro.models.lm import spec_params
+from repro.models.spec import spec_params as count_params
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def active_params(cfg) -> int:
+    """Parameters doing matmul work per token: embedding gathers excluded
+    (tied embeddings count once — they are the head matmul); MoE expert
+    weights scaled by k/E."""
+    tree = spec_params(cfg)
+    total = count_params(tree)
+    embed = cfg.vocab_size * cfg.d_model if "embed" in tree else 0
+    active = total
+    if embed and not cfg.tie_embeddings:
+        active -= embed          # untied: gather only, head counted via lm_head
+    if cfg.num_experts:
+        # stacked spec already includes the num_groups factor
+        expert_p = count_params(tree["groups"]["p0"]["moe"]) \
+            - cfg.num_groups * (cfg.d_model * cfg.num_experts
+                                + cfg.d_model)   # router + norm stay dense
+        active -= expert_p * (1 - cfg.experts_per_token / cfg.num_experts)
+    return int(active)
+
+
+def model_flops_per_device(cfg, shape, num_devices: int) -> float:
+    n = active_params(cfg)
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks / num_devices
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks / num_devices
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch / num_devices
+
+
+def load(tag: str, mesh: str):
+    recs = []
+    for arch in ARCH_NAMES:
+        for shp in SHAPES:
+            p = RESULTS / "dryrun" / f"{arch}__{shp}__{mesh}__{tag}.json"
+            if p.exists():
+                recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def analyze(rec) -> dict:
+    if rec["status"] != "ok":
+        return rec
+    cfg = get_arch(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    ndev = rec["num_devices"]
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS_BF16
+    t_mem = rec["bytes_accessed_per_device"] / HBM_BW
+    coll_bytes = sum(v["bytes"] for v in rec["collectives"].values())
+    t_coll = coll_bytes / ICI_BW
+    mf = model_flops_per_device(cfg, shape, ndev)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # roofline fraction: useful compute time / modeled step time
+    frac = (mf / PEAK_FLOPS_BF16) / bound if bound > 0 else 0.0
+    return dict(rec, t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+                dominant=dom, model_flops=mf,
+                useful_ratio=mf / max(rec["flops_per_device"], 1.0),
+                roofline_fraction=frac, collective_gb=coll_bytes / 1e9)
+
+
+RECO = {
+    ("compute",): "increase arithmetic efficiency: fuse attention (Pallas"
+                  " flash kernel on TPU), reduce remat recompute",
+    ("memory",): "cut HBM traffic: larger fusion scope, bf16 intermediates,"
+                 " smaller attention chunks' logit spill, less remat",
+    ("collective",): "reshard: fewer all-gathers (FSDP prefetch reuse across"
+                     " microbatches), bf16 collectives, overlap with compute",
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args(argv)
+
+    rows = [analyze(r) for r in load(args.tag, args.mesh)]
+    hdr = (f"| arch | shape | status | Tcomp(s) | Tmem(s) | Tcoll(s) | "
+           f"dominant | model GF/dev | useful | roofline |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | "
+                         f"skip: {r.get('reason', r.get('error', ''))[:60]} "
+                         f"| | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {r['t_compute']:.3f} | {r['t_memory']:.3f} "
+            f"| {r['t_collective']:.3f} | **{r['dominant']}** "
+            f"| {r['model_flops'] / 1e9:.1f} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    table = "\n".join(lines)
+    out = RESULTS / f"roofline_{args.tag}_{args.mesh}.md"
+    out.write_text(table + "\n")
+    print(table)
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        collbound = max(ok, key=lambda r: r["t_collective"]
+                        / max(max(r["t_compute"], r["t_memory"]), 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']}×{worst['shape']}"
+              f" ({worst['roofline_fraction']:.4f})")
+        print(f"most collective-bound:  {collbound['arch']}×"
+              f"{collbound['shape']} (Tcoll {collbound['t_collective']:.3f}s"
+              f" vs Tcomp {collbound['t_compute']:.3f}s)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py).
+``--full`` uses paper-scale settings (slow on CPU); default is a
+CPU-budgeted quick pass exercising every harness.
+
+The roofline/dry-run analysis is separate:
+    python -m repro.launch.dryrun --arch all --shape all --mesh both
+    python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_complexity, bench_deep_gcn, bench_fig6,
+                            bench_memory, bench_partition_quality,
+                            bench_scale, bench_spmm,
+                            bench_stochastic_partitions)
+    benches = {
+        "partition_quality": bench_partition_quality.run,     # Table 2/Fig 2
+        "stochastic_partitions": bench_stochastic_partitions.run,  # Fig 4
+        "memory": bench_memory.run,                           # Table 5
+        "complexity": bench_complexity.run,                   # Tables 1 & 9
+        "spmm": bench_spmm.run,                               # Table 6
+        "deep_gcn": bench_deep_gcn.run,                       # Table 11/Fig 5
+        "fig6": bench_fig6.run,                               # Fig 6
+        "scale": bench_scale.run,                             # Tables 8 & 13
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(quick=quick)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED benches: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("\n# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

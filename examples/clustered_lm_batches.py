@@ -1,0 +1,42 @@
+"""Beyond-paper demo: Cluster-GCN's batching insight applied to LM data
+(DESIGN.md §4 'transferable insight').
+
+Documents are clustered by hashed-vocabulary similarity; each batch
+draws from q clusters (stochastic multiple partitions, Algorithm 1).
+We measure the within-batch vocabulary locality — the LM analogue of
+'embedding utilization' — vs random batching.
+
+    PYTHONPATH=src python examples/clustered_lm_batches.py
+"""
+import numpy as np
+
+from repro.data.clustered_batching import ClusteredBatcher
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # synthetic corpus: 6 topics with overlapping vocab ranges
+    docs = []
+    for topic in range(6):
+        lo = topic * 80
+        for _ in range(50):
+            docs.append(rng.integers(lo, lo + 150, size=96))
+    print(f"corpus: {len(docs)} docs")
+
+    cb = ClusteredBatcher(docs, num_clusters=12, clusters_per_batch=3,
+                          batch_docs=24, seed=0)
+    clustered = [cb.within_batch_vocab_locality(b) for b in cb.epoch(0)]
+    random_batches = [rng.choice(len(docs), 24, replace=False)
+                      for _ in range(len(clustered))]
+    random_loc = [cb.within_batch_vocab_locality(b) for b in random_batches]
+
+    print(f"within-batch vocab locality (Jaccard):")
+    print(f"  clustered batches: {np.mean(clustered):.4f}")
+    print(f"  random batches:    {np.mean(random_loc):.4f}")
+    print(f"  improvement:       {np.mean(clustered) / np.mean(random_loc):.2f}x")
+    print("(higher locality -> sparser embedding-gradient rows per step,"
+          " better vocab-sharded embedding cache reuse)")
+
+
+if __name__ == "__main__":
+    main()

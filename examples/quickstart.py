@@ -1,0 +1,43 @@
+"""Quickstart: the paper's algorithm in ~40 lines of public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. generate a community graph (stand-in for PPI; no network access),
+2. partition it with the METIS-like multilevel partitioner,
+3. train a 3-layer GCN with Cluster-GCN batches (Algorithm 1),
+4. evaluate with exact full-graph propagation.
+"""
+import numpy as np
+
+from repro.core import ClusterBatcher, GCNConfig, train_cluster_gcn
+from repro.graph import make_dataset, partition_graph, within_cut_fraction
+from repro.nn import adamw
+
+
+def main():
+    # 1. data
+    graph = make_dataset("cora", scale=1.0, seed=0)
+    print(f"graph: {graph.num_nodes} nodes, {graph.num_edges // 2} edges")
+
+    # 2. clustering partition (the paper's key preprocessing step)
+    parts, stats = partition_graph(graph, num_parts=10, method="metis")
+    print(f"partition: {stats.within_fraction:.1%} of edges kept "
+          f"within clusters (random would keep ~10%), "
+          f"{stats.seconds:.2f}s")
+
+    # 3. Cluster-GCN training: sample q=2 clusters per step, re-add
+    #    between-cluster links, re-normalize (paper §3.2)
+    cfg = GCNConfig(in_dim=graph.features.shape[1], hidden_dim=64,
+                    out_dim=int(graph.labels.max()) + 1,
+                    num_layers=3, dropout=0.2)
+    batcher = ClusterBatcher(graph, parts, clusters_per_batch=2, seed=0)
+    result = train_cluster_gcn(graph, batcher, cfg, adamw(1e-2),
+                               num_epochs=15, eval_every=5, verbose=True)
+
+    # 4. the batcher reports its padding efficiency (XLA static shapes)
+    print("padding stats:", batcher.padding_stats())
+    print(f"final val accuracy: {result.history[-1]['val_score']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Serve a small LM with batched requests: prefill + greedy decode using
+the same step functions the multi-pod dry-run lowers.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-1b]
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    # delegate to the production serving launcher in smoke mode
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+           "--smoke", "--batch", str(args.batch),
+           "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Architecture registry + input specs for every (arch × shape) cell."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, ShapeConfig, SHAPES
+
+_MODULES = {
+    "xlstm-1.3b": "xlstm_1_3b",
+    "zamba2-7b": "zamba2_7b",
+    "internlm2-20b": "internlm2_20b",
+    "llama3.2-1b": "llama3_2_1b",
+    "granite-3-2b": "granite_3_2b",
+    "gemma3-1b": "gemma3_1b",
+    "dbrx-132b": "dbrx_132b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "paligemma-3b": "paligemma_3b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_arch(name: str, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.ARCH
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeConfig
+                   ) -> Tuple[bool, Optional[str]]:
+    """Assignment skip rules (documented in DESIGN.md §4)."""
+    if cfg.is_encoder and shape.is_decode:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k":
+        ok = cfg.is_subquadratic() or cfg.name.startswith("gemma3")
+        if not ok:
+            return False, "pure full-attention arch; 500k context skipped"
+    return True, None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    """Global-batch ShapeDtypeStruct stand-ins for the model data inputs
+    (weak-type-correct, shardable, no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sd((B, 1), i32)}
+    if cfg.input_mode == "embeddings":           # hubert
+        specs = {"embeddings": sd((B, S, cfg.d_model), f32)}
+        if shape.kind == "train":
+            specs["targets"] = sd((B, S), i32)
+        return specs
+    if cfg.num_prefix_embeddings:                # paligemma
+        npfx = cfg.num_prefix_embeddings
+        return {"prefix_embeddings": sd((B, npfx, cfg.d_model), f32),
+                "tokens": sd((B, S - npfx), i32)}
+    return {"tokens": sd((B, S), i32)}
+
+
+def make_inputs(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0) -> Dict:
+    """Real random inputs matching input_specs (smoke tests / examples)."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, s in input_specs(cfg, shape).items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size,
+                                           s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, s.dtype)
+    return out

@@ -1,0 +1,4 @@
+"""Paper Table 4 config for Amazon2M-like data (§4.2)."""
+PARTITIONS = 15000
+CLUSTERS_PER_BATCH = 10
+HIDDEN = 400

@@ -1,0 +1,15 @@
+"""llama3.2-1b [dense] — 16L d=2048 32H (GQA kv=8) d_ff=8192 vocab=128256
+[hf:meta-llama/Llama-3.2-1B; unverified]"""
+from repro.models.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="llama3.2-1b", family="dense", num_layers=16, d_model=2048,
+    num_heads=32, num_kv_heads=8, d_ff=8192, vocab_size=128256,
+    pattern=("attn",), head_dim=64, rope_theta=500_000.0,
+    tie_embeddings=True)
+
+SMOKE = ArchConfig(
+    name="llama3.2-1b-smoke", family="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+    pattern=("attn",), head_dim=16, rope_theta=500_000.0,
+    tie_embeddings=True)

@@ -1,0 +1,18 @@
+"""Paper dataset configs (Table 4): partitions, clusters-per-batch,
+hidden size per dataset — plus the §4.3 SOTA deep recipe."""
+from repro.core.gcn import GCNConfig
+
+# paper Table 4 hyper-parameters
+PARTITIONS = 50
+CLUSTERS_PER_BATCH = 1
+HIDDEN = 512
+
+# §4.3 SOTA: 5 layers, 2048 hidden, diagonal enhancement Eq. 11
+SOTA = dict(num_layers=5, hidden=2048, norm="eq11", diag_lambda=1.0,
+            dropout=0.1)
+
+
+def gcn_config(in_dim: int, out_dim: int, num_layers: int = 3,
+               hidden: int = HIDDEN) -> GCNConfig:
+    return GCNConfig(in_dim=in_dim, hidden_dim=hidden, out_dim=out_dim,
+                     num_layers=num_layers, dropout=0.2, multilabel=True)

@@ -1,0 +1,4 @@
+"""Paper Table 4 config for Reddit-like data."""
+PARTITIONS = 1500
+CLUSTERS_PER_BATCH = 20
+HIDDEN = 128

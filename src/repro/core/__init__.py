@@ -1,0 +1,9 @@
+from repro.core.batching import (ClusterBatch, ClusterBatcher,
+                                 utilization_stats,
+                                 label_entropy_per_cluster)
+from repro.core.gcn import GCNConfig, init_gcn, gcn_forward, gcn_loss, micro_f1
+from repro.core.trainer import (train_cluster_gcn, make_train_step, evaluate,
+                                full_graph_logits, TrainResult)
+from repro.core.baselines import (train_full_batch, train_expansion_sgd,
+                                  train_sage, train_vrgcn, lhop_closure,
+                                  expansion_stats)

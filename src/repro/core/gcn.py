@@ -1,0 +1,117 @@
+"""GCN model (paper Eq. 1/8/9/10/11) as pure-JAX functions on dense
+cluster-batch adjacency blocks.
+
+The per-batch compute is exactly the paper's: Z^{l+1} = Â (X^l W^l),
+X^{l+1} = σ(Z^{l+1}); Â is the re-normalized q-cluster union block built
+host-side by ClusterBatcher. The Â·H product is the kernel hot-spot — it
+dispatches through `spmm` so the Pallas block kernel (repro.kernels) can
+be swapped in on TPU; the default is jnp.matmul (XLA dense, also what the
+dry-run/roofline measures).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import glorot, zeros_init
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    in_dim: int
+    hidden_dim: int
+    out_dim: int
+    num_layers: int = 3
+    dropout: float = 0.2          # paper §4: dropout 20%
+    residual: bool = False        # paper Eq. 8
+    multilabel: bool = False      # PPI/Amazon: sigmoid BCE; else softmax CE
+    layernorm: bool = True        # used by the deep-GCN experiments
+    precompute_ax: bool = False   # paper §6.2 (AX done once per batch)
+
+    @property
+    def dims(self):
+        ds = [self.in_dim] + [self.hidden_dim] * (self.num_layers - 1) \
+             + [self.out_dim]
+        return list(zip(ds[:-1], ds[1:]))
+
+
+def init_gcn(key, cfg: GCNConfig) -> PyTree:
+    params = {"layers": []}
+    for i, (din, dout) in enumerate(cfg.dims):
+        key, k1 = jax.random.split(key)
+        layer = {"w": glorot(k1, (din, dout)), "b": jnp.zeros((dout,))}
+        if cfg.layernorm and i < cfg.num_layers - 1:
+            layer["ln_scale"] = jnp.ones((dout,))
+        params["layers"].append(layer)
+    return params
+
+
+def _layernorm(x, scale):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def gcn_forward(params: PyTree, adj: jnp.ndarray, x: jnp.ndarray,
+                cfg: GCNConfig, *, train: bool = False,
+                rng: Optional[jax.Array] = None,
+                spmm: Callable = jnp.matmul) -> jnp.ndarray:
+    """Returns final-layer logits Z^{(L)} (no activation on last layer)."""
+    h = x
+    for i, layer in enumerate(params["layers"]):
+        if train and cfg.dropout > 0:
+            rng, sub = jax.random.split(rng)
+            keep = 1.0 - cfg.dropout
+            h = h * jax.random.bernoulli(sub, keep, h.shape) / keep
+        z = h @ layer["w"] + layer["b"]          # X W   : (b, F')
+        if not (i == 0 and cfg.precompute_ax):   # Â (XW): (b, b)·(b, F')
+            z = spmm(adj, z)
+        last = i == len(params["layers"]) - 1
+        if not last:
+            if cfg.residual and z.shape == h.shape:
+                z = z + h                        # paper Eq. 8
+            z = jax.nn.relu(z)
+            if cfg.layernorm:
+                z = _layernorm(z, layer["ln_scale"])
+        h = z
+    return h
+
+
+def gcn_loss(params: PyTree, batch_tuple, cfg: GCNConfig, *,
+             train: bool = True, rng=None, spmm: Callable = jnp.matmul):
+    """(loss, aux) on a ClusterBatch.astuple(). aux carries micro-F1 parts."""
+    adj, feats, labels, node_mask, loss_mask, num_real = batch_tuple
+    if cfg.precompute_ax:
+        feats = spmm(adj, feats)                 # exact 1-hop precompute
+    logits = gcn_forward(params, adj, feats, cfg, train=train, rng=rng,
+                         spmm=spmm)
+    denom = jnp.maximum(loss_mask.sum(), 1.0)
+    if cfg.multilabel:
+        y = labels.astype(jnp.float32)
+        ll = jnp.maximum(logits, 0) - logits * y + jnp.log1p(
+            jnp.exp(-jnp.abs(logits)))
+        loss = (ll.sum(-1) * loss_mask).sum() / denom
+        pred = (logits > 0).astype(jnp.float32)
+        tp = (pred * y * loss_mask[:, None]).sum()
+        fp = (pred * (1 - y) * loss_mask[:, None]).sum()
+        fn = ((1 - pred) * y * loss_mask[:, None]).sum()
+        aux = {"tp": tp, "fp": fp, "fn": fn, "n": denom}
+    else:
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32),
+                                   axis=-1)[:, 0]
+        loss = (nll * loss_mask).sum() / denom
+        correct = (logits.argmax(-1) == labels).astype(jnp.float32)
+        aux = {"correct": (correct * loss_mask).sum(), "n": denom}
+    return loss, aux
+
+
+def micro_f1(tp: float, fp: float, fn: float) -> float:
+    denom = 2 * tp + fp + fn
+    return float(2 * tp / denom) if denom > 0 else 0.0

@@ -1,0 +1,14 @@
+from repro.graph.csr import CSRGraph, edge_cut, within_cut_fraction
+from repro.graph.generators import (SBMSpec, CoPurchaseSpec, make_dataset,
+                                    stochastic_block_model, copurchase_graph)
+from repro.graph.partition import (partition_graph, metis_like_partition,
+                                   random_partition, PartitionStats)
+from repro.graph.normalization import normalize_dense, normalize_csr
+
+__all__ = [
+    "CSRGraph", "edge_cut", "within_cut_fraction",
+    "SBMSpec", "CoPurchaseSpec", "make_dataset", "stochastic_block_model",
+    "copurchase_graph",
+    "partition_graph", "metis_like_partition", "random_partition",
+    "PartitionStats", "normalize_dense", "normalize_csr",
+]

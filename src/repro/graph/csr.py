@@ -1,0 +1,169 @@
+"""CSR graph container and basic graph ops (host-side, numpy).
+
+The framework keeps graphs on the host in CSR form; device-side work
+happens on *cluster batches* (see repro.core.batching) which are dense /
+block-sparse and fixed-shape. Everything here is numpy so preprocessing
+(partitioning, normalization statistics) never touches jax device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    """Undirected graph in CSR form.
+
+    indptr:  (N+1,) int64
+    indices: (nnz,) int32 — column index of each edge slot
+    data:    (nnz,) float32 — edge weight (1.0 for unweighted)
+    features: optional (N, F) float32 node features
+    labels:   optional (N,) int32 (multi-class) or (N, C) float32 (multi-label)
+    train_mask/val_mask/test_mask: optional (N,) bool
+    """
+
+    indptr: Array
+    indices: Array
+    data: Array
+    features: Optional[Array] = None
+    labels: Optional[Array] = None
+    train_mask: Optional[Array] = None
+    val_mask: Optional[Array] = None
+    test_mask: Optional[Array] = None
+
+    def __post_init__(self):
+        self.indptr = np.asarray(self.indptr, dtype=np.int64)
+        self.indices = np.asarray(self.indices, dtype=np.int32)
+        self.data = np.asarray(self.data, dtype=np.float32)
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def num_edges(self) -> int:
+        """Number of directed edge slots (2x undirected edges)."""
+        return len(self.indices)
+
+    @property
+    def degrees(self) -> Array:
+        return np.diff(self.indptr)
+
+    def neighbors(self, u: int) -> Array:
+        return self.indices[self.indptr[u]:self.indptr[u + 1]]
+
+    def edge_weights(self, u: int) -> Array:
+        return self.data[self.indptr[u]:self.indptr[u + 1]]
+
+    # ------------------------------------------------------------------
+    # construction helpers
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_edges(num_nodes: int, src: Array, dst: Array,
+                   make_undirected: bool = True, **node_data) -> "CSRGraph":
+        """Build CSR from an edge list. Dedupes and removes self-loops."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        if make_undirected:
+            src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        # dedupe
+        key = src * num_nodes + dst
+        key = np.unique(key)
+        src = (key // num_nodes).astype(np.int64)
+        dst = (key % num_nodes).astype(np.int32)
+        order = np.argsort(src, kind="stable")
+        src, dst = src[order], dst[order]
+        indptr = np.zeros(num_nodes + 1, dtype=np.int64)
+        np.add.at(indptr, src + 1, 1)
+        indptr = np.cumsum(indptr)
+        return CSRGraph(indptr=indptr, indices=dst,
+                        data=np.ones(len(dst), np.float32), **node_data)
+
+    def to_scipy(self):
+        import scipy.sparse as sp
+        return sp.csr_matrix((self.data, self.indices, self.indptr),
+                             shape=(self.num_nodes, self.num_nodes))
+
+    # ------------------------------------------------------------------
+    # subgraph extraction — the core primitive Cluster-GCN needs
+    # ------------------------------------------------------------------
+    def subgraph(self, nodes: Array) -> Tuple["CSRGraph", Array]:
+        """Induced subgraph on `nodes` (kept in given order).
+
+        Returns (sub, relabel) where relabel maps old ids -> new local ids
+        (-1 for nodes not in the subgraph).
+        """
+        nodes = np.asarray(nodes, dtype=np.int64)
+        n = self.num_nodes
+        relabel = np.full(n, -1, dtype=np.int64)
+        relabel[nodes] = np.arange(len(nodes))
+        # gather each node's adjacency rows
+        starts = self.indptr[nodes]
+        ends = self.indptr[nodes + 1]
+        counts = ends - starts
+        total = int(counts.sum())
+        # flat gather indices, vectorized: for each selected row i the slots
+        # are starts[i] .. ends[i]-1
+        pos = np.cumsum(np.concatenate([[0], counts]))
+        flat = (np.repeat(starts, counts)
+                + np.arange(total, dtype=np.int64)
+                - np.repeat(pos[:-1], counts))
+        cols = self.indices[flat]
+        vals = self.data[flat]
+        new_cols = relabel[cols]
+        keep = new_cols >= 0
+        # rebuild indptr
+        row_of = np.repeat(np.arange(len(nodes)), counts)[keep]
+        new_cols = new_cols[keep].astype(np.int32)
+        vals = vals[keep]
+        indptr = np.zeros(len(nodes) + 1, dtype=np.int64)
+        np.add.at(indptr, row_of + 1, 1)
+        indptr = np.cumsum(indptr)
+        sub = CSRGraph(
+            indptr=indptr, indices=new_cols, data=vals,
+            features=None if self.features is None else self.features[nodes],
+            labels=None if self.labels is None else self.labels[nodes],
+            train_mask=None if self.train_mask is None else self.train_mask[nodes],
+            val_mask=None if self.val_mask is None else self.val_mask[nodes],
+            test_mask=None if self.test_mask is None else self.test_mask[nodes],
+        )
+        return sub, relabel
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        arrs = dict(indptr=self.indptr, indices=self.indices, data=self.data)
+        for k in ("features", "labels", "train_mask", "val_mask", "test_mask"):
+            v = getattr(self, k)
+            if v is not None:
+                arrs[k] = v
+        np.savez_compressed(path, **arrs)
+
+    @staticmethod
+    def load(path: str) -> "CSRGraph":
+        z = np.load(path)
+        kw = {k: z[k] for k in z.files}
+        return CSRGraph(**kw)
+
+
+def edge_cut(graph: CSRGraph, parts: Array) -> int:
+    """Number of directed edge slots crossing partitions."""
+    parts = np.asarray(parts)
+    row_of = np.repeat(np.arange(graph.num_nodes), graph.degrees)
+    return int(np.count_nonzero(parts[row_of] != parts[graph.indices]))
+
+
+def within_cut_fraction(graph: CSRGraph, parts: Array) -> float:
+    """Fraction of edges kept inside partitions == embedding utilization
+    (paper §3.1: utilization of a batch == ||A_BB||_0)."""
+    if graph.num_edges == 0:
+        return 1.0
+    return 1.0 - edge_cut(graph, parts) / graph.num_edges

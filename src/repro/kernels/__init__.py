@@ -1,0 +1,5 @@
+from repro.kernels.ops import (spmm, spmm_dense, multi_head_attention,
+                               block_ell_from_dense, block_ell_from_csr)
+from repro.kernels.block_spmm import spmm_block_ell
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels import ref

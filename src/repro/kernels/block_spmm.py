@@ -1,0 +1,82 @@
+"""Block-ELL sparse·dense matmul Pallas TPU kernel — the Cluster-GCN
+hot-spot Â'X adapted to the TPU memory hierarchy (DESIGN.md §3).
+
+Format (host-built, see ops.py):
+  blocks:     (nrb, K, B, B)  — dense value tiles, zero-padded
+  block_cols: (nrb, K) int32  — column-block index per slot; empty slots
+                                 point at column-block 0 with an all-zero
+                                 value tile, so NO in-kernel branch is
+                                 needed (zero tile contributes nothing).
+  x:          (ncb * B, F)    — dense right-hand side.
+
+Kernel: grid (nrb, F/Fb, K). The scalar-prefetched block_cols drives the
+BlockSpec index_map for x, so the pipeline DMAs exactly the needed
+(B, Fb) tile of x from HBM into VMEM per step. The MXU sees only dense
+(B,B)@(B,Fb) tiles — 128-aligned. Accumulation in a VMEM fp32 scratch
+across the K (innermost, sequential) grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BLOCK = 128
+
+
+def _spmm_kernel(block_cols_ref,          # scalar-prefetch (nrb, K)
+                 blocks_ref,              # (1, 1, B, B) VMEM
+                 x_ref,                   # (B, Fb) VMEM
+                 o_ref,                   # (B, Fb) VMEM
+                 acc_ref):                # (B, Fb) fp32 VMEM scratch
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = blocks_ref[0, 0].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        a, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def spmm_block_ell(blocks: jnp.ndarray, block_cols: jnp.ndarray,
+                   x: jnp.ndarray, *, block_f: int = 128,
+                   interpret: bool = False) -> jnp.ndarray:
+    """y = A @ x with A in block-ELL form. Returns (nrb*B, F)."""
+    nrb, K, B, B2 = blocks.shape
+    assert B == B2, "square blocks"
+    n_cols, F = x.shape
+    assert n_cols % B == 0, "x rows must be multiple of block size"
+    assert F % block_f == 0, f"F={F} must be a multiple of block_f={block_f}"
+    nf = F // block_f
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nrb, nf, K),
+        in_specs=[
+            pl.BlockSpec((1, 1, B, B), lambda i, j, k, bc: (i, k, 0, 0)),
+            pl.BlockSpec((B, block_f), lambda i, j, k, bc: (bc[i, k], j)),
+        ],
+        out_specs=pl.BlockSpec((B, block_f), lambda i, j, k, bc: (i, j)),
+        scratch_shapes=[pltpu.VMEM((B, block_f), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrb * B, F), x.dtype),
+        interpret=interpret,
+        name="block_ell_spmm",
+    )
+    return fn(block_cols.astype(jnp.int32), blocks, x)

@@ -1,0 +1,144 @@
+"""Flash attention Pallas TPU kernel (tiled online softmax).
+
+Used by the LM architectures for training/prefill. Supports causal
+masking, sliding windows (gemma3 local layers), GQA (kv-head broadcast
+handled by the ops.py wrapper via head grouping), and logit softcapping.
+
+Grid: (batch*heads, num_q_blocks, num_kv_blocks) — kv innermost and
+sequential; running max/denominator and the fp32 accumulator live in VMEM
+scratch across kv steps. Fully-masked kv blocks (beyond the causal
+frontier or outside the sliding window) skip their MXU work via pl.when.
+
+Block sizes default to (128, 128) q×kv tiles — MXU-aligned; head_dim is
+kept whole in VMEM (≤ 256 for all assigned archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  softcap: float | None, block_q: int, block_k: int,
+                  seq_k: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # absolute positions of this tile's rows/cols; q rows are offset so the
+    # END of q aligns with the END of k (training: q_offset=0; not decode)
+    q_start = qi * block_q + q_offset
+    k_start = ki * block_k
+
+    # tile reachable at all? (causal frontier / window)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (m_new == NEG_INF -> exp underflows to 0)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        alpha = jnp.where(m_prev > NEG_INF / 2, alpha, 0.0)
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)           # (bk, d)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal or window is not None:
+        # static-shape guard: skip tiles fully outside the visible band
+        q_last = q_start + block_q - 1
+        reach = k_start <= q_last if causal else True
+        inwin = (k_start + block_k - 1 > q_start - (window or 0)) \
+            if window is not None else True
+        pl.when(jnp.logical_and(reach, inwin))(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k",
+    "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (BH, Tq, D); k, v: (BH, Tk, D) — heads pre-flattened/broadcast
+    by the caller (see ops.multi_head_attention). Returns (BH, Tq, D)."""
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    scale = float(scale if scale is not None else 1.0 / (D ** 0.5))
+    q_offset = Tk - Tq  # align sequence ends
+
+    # pad sequences up to tile multiples (masked out by seq_k bound)
+    pad_q = (-Tq) % block_q
+    pad_k = (-Tk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    nq = q.shape[1] // block_q
+    nk = k.shape[1] // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, seq_k=Tk,
+        q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((BH, q.shape[1], D), q.dtype),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)
+    return out[:, :Tq]

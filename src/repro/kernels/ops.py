@@ -1,0 +1,155 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+`use_pallas` policy: 'auto' uses the Pallas kernel on TPU backends and the
+pure-XLA reference elsewhere (this container is CPU — dry-run/roofline
+numbers come from the XLA path; kernels are validated in interpret mode by
+tests). 'interpret' forces the kernel body through the Pallas interpreter
+(CPU-correctness mode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as _ref
+from repro.kernels.block_spmm import spmm_block_ell
+from repro.kernels.flash_attention import flash_attention
+
+Mode = Literal["auto", "pallas", "interpret", "ref", "blocked"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: Mode) -> str:
+    if mode == "auto":
+        # blocked = pure-XLA flash-style attention: same FLOPs/memory
+        # profile as the Pallas kernel, so the dry-run roofline is honest
+        return "pallas" if _on_tpu() else "blocked"
+    return mode
+
+
+# ----------------------------------------------------------------------
+# block-ELL construction (host, numpy)
+# ----------------------------------------------------------------------
+def block_ell_from_dense(adj: np.ndarray, block: int = 128,
+                         k_slots: int | None = None):
+    """Tile a dense (n, m) matrix into block-ELL. Returns (blocks,
+    block_cols) with shapes ((nrb, K, B, B), (nrb, K)); rows padded up to a
+    block multiple. Empty slots carry a zero tile pointing at col-block 0."""
+    n, m = adj.shape
+    B = block
+    nrb, ncb = -(-n // B), -(-m // B)
+    padded = np.zeros((nrb * B, ncb * B), adj.dtype)
+    padded[:n, :m] = adj
+    tiles = padded.reshape(nrb, B, ncb, B).transpose(0, 2, 1, 3)  # (nrb,ncb,B,B)
+    nz = np.abs(tiles).sum(axis=(2, 3)) > 0                        # (nrb, ncb)
+    K = k_slots if k_slots is not None else max(1, int(nz.sum(1).max()))
+    blocks = np.zeros((nrb, K, B, B), adj.dtype)
+    cols = np.zeros((nrb, K), np.int32)
+    for i in range(nrb):
+        cbs = np.where(nz[i])[0][:K]
+        blocks[i, :len(cbs)] = tiles[i, cbs]
+        cols[i, :len(cbs)] = cbs
+    return blocks, cols
+
+
+def block_ell_from_csr(indptr, indices, data, n_cols: int, block: int = 128,
+                       k_slots: int | None = None):
+    """Block-ELL from CSR without densifying the full matrix (full-graph
+    inference path). Memory ~ nnz-blocks · B²."""
+    n = len(indptr) - 1
+    B = block
+    nrb, ncb = -(-n // B), -(-n_cols // B)
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    rb, cb = rows // B, indices // B
+    key = rb * ncb + cb
+    uniq = np.unique(key)
+    slot_of = {int(k): j for j, k in enumerate(uniq)}
+    per_row = np.bincount(uniq // ncb, minlength=nrb)
+    K = k_slots if k_slots is not None else max(1, int(per_row.max()))
+    blocks = np.zeros((nrb, K, B, B), np.float32)
+    cols = np.zeros((nrb, K), np.int32)
+    # slot index within row-block for each unique block
+    slot_in_row = np.zeros(len(uniq), np.int64)
+    counts = {}
+    for j, k in enumerate(uniq):
+        r = int(k // ncb)
+        s = counts.get(r, 0)
+        slot_in_row[j] = s
+        counts[r] = s + 1
+        if s < K:
+            cols[r, s] = int(k % ncb)
+    # scatter values
+    flat_slot = np.array([slot_of[int(k)] for k in key], np.int64)
+    s_idx = slot_in_row[flat_slot]
+    keep = s_idx < K
+    np.add.at(blocks,
+              (rb[keep], s_idx[keep], rows[keep] % B, indices[keep] % B),
+              data[keep])
+    return blocks, cols
+
+
+# ----------------------------------------------------------------------
+# SpMM dispatch
+# ----------------------------------------------------------------------
+def spmm(blocks: jnp.ndarray, block_cols: jnp.ndarray, x: jnp.ndarray, *,
+         mode: Mode = "auto", block_f: int = 128) -> jnp.ndarray:
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.spmm_block_ell_ref(blocks, block_cols, x)
+    return spmm_block_ell(blocks, block_cols, x, block_f=block_f,
+                          interpret=(m == "interpret"))
+
+
+def spmm_dense(adj: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense fallback used by ClusterBatch forward (XLA matmul)."""
+    return adj @ x
+
+
+# ----------------------------------------------------------------------
+# attention dispatch
+# ----------------------------------------------------------------------
+def multi_head_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         causal: bool = True, window: int | None = None,
+                         softcap: float | None = None,
+                         scale: float | None = None,
+                         mode: Mode = "auto",
+                         block_q: int = 128,
+                         block_k: int = 128) -> jnp.ndarray:
+    """q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D); GQA broadcast inside.
+    Returns (B, Hq, Tq, D)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.mha_ref(q, k, v, causal=causal, window=window,
+                            softcap=softcap, scale=scale)
+    B, Hq, Tq, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    if m == "blocked":
+        if Tq <= 2 * block_q:   # small sequences: plain attention is fine
+            return _ref.mha_ref(q, k, v, causal=causal, window=window,
+                                softcap=softcap, scale=scale)
+        # §Perf A2: for Hkv==1 pass kv UN-broadcast — grouping q heads
+        # avoids materializing kv Hq-fold. For Hkv>1 with model-sharded
+        # q heads, the (Hkv, rep) regrouping would break head sharding
+        # and emit per-chunk partial-sum all-reduces (measured on dbrx) —
+        # those archs keep the broadcast (sharding-preserving) path.
+        if Hkv > 1 and rep > 1:
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+        return _ref.blocked_attention(q, k, v, causal=causal,
+                                      window=window, softcap=softcap,
+                                      scale=scale, q_chunk=block_q)
+    kb = jnp.repeat(k, rep, axis=1).reshape(B * Hq, -1, D)
+    vb = jnp.repeat(v, rep, axis=1).reshape(B * Hq, -1, D)
+    qb = q.reshape(B * Hq, Tq, D)
+    out = flash_attention(qb, kb, vb, causal=causal, window=window,
+                          softcap=softcap, scale=scale, block_q=block_q,
+                          block_k=block_k, interpret=(m == "interpret"))
+    return out.reshape(B, Hq, Tq, D)

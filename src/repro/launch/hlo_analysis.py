@@ -1,0 +1,370 @@
+"""Loop-aware cost analysis over optimized (post-SPMD) HLO text.
+
+XLA's HloCostAnalysis (what `compiled.cost_analysis()` reports) counts
+every while-loop body ONCE — our models are scan-heavy (layer groups,
+microbatch accumulation, GLA chunks, loss chunks), so that undercounts
+FLOPs by 1–3 orders of magnitude. This walker parses the scheduled HLO
+text, multiplies each while body by its `known_trip_count` backend
+config, counts `conditional` as its most expensive branch (lax.switch
+executes one), counts fusion interfaces once (fusion-internal traffic is
+on-chip), and accumulates collective wire-bytes per kind.
+
+Outputs per-device totals:
+  flops            — dot/conv/reduce FLOPs × trip counts
+  bytes            — HBM traffic proxy: op interface bytes × trip counts
+  collective_bytes — ring-estimate wire bytes by collective kind
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e4m3": 1, "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4,
+                "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _type_info(sig: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """bytes + list of (dtype, dims) for a type signature (incl tuples)."""
+    total = 0
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, ds))
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_bytes: int
+    out_shapes: List
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            rec = self.coll.setdefault(k, {"count": 0.0, "bytes": 0.0})
+            rec["count"] += v["count"] * mult
+            rec["bytes"] += v["bytes"] * mult
+
+
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+             "constant", "after-all", "partition-id", "replica-id",
+             "opt-barrier", "domain", "iota"}
+
+_SLICE_LIKE = {"dynamic-slice", "gather", "slice"}
+
+
+def _op_traffic(op: "Op", table, comps=None) -> float:
+    """HBM traffic estimate for one op. Slice-like ops only touch the
+    slice (2×out), dynamic-update-slice only the update region (its
+    out_bytes is the whole aliased buffer — a huge overcount for KV-cache
+    writes); small fusions wrapping a slice inherit slice semantics."""
+    operand_bytes = sum(table[o].out_bytes for o in op.operands
+                        if o in table)
+    if op.opcode in _SLICE_LIKE:
+        return 2.0 * op.out_bytes
+    if op.opcode in ("dynamic-update-slice", "scatter"):
+        upd = 0
+        for o in op.operands[1:]:
+            if o in table:
+                upd = max(upd, table[o].out_bytes)
+        return 2.0 * upd + 64.0
+    if op.opcode == "fusion" and comps is not None:
+        m = _CALLS_RE.search(op.attrs)
+        if m:
+            inner = comps.get(m.group(1), [])
+            kinds = {o.opcode for o in inner}
+            if len(inner) <= 8 and kinds & (_SLICE_LIKE
+                                            | {"dynamic-update-slice"}):
+                has_dus = "dynamic-update-slice" in kinds
+                if has_dus:
+                    upd = min((table[o].out_bytes for o in op.operands[1:]
+                               if o in table), default=op.out_bytes)
+                    return 2.0 * upd + 64.0
+                return 2.0 * op.out_bytes
+    return op.out_bytes + operand_bytes
+
+_COLLECTIVES = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _parse_op_line(line: str) -> Optional[Op]:
+        """Structural parse of `  [ROOT] %name = TYPE opcode(args), attrs`.
+        Handles tuple types (with parens/commas) — HLO embeds /*index=N*/
+        comments inside large tuples, so no single regex is safe."""
+        line = _COMMENT_RE.sub("", line).strip()
+        if line.startswith("ROOT "):
+            line = line[5:]
+        if not line.startswith("%") or " = " not in line:
+            return None
+        name, rhs = line.split(" = ", 1)
+        name = name.strip().lstrip("%")
+        rhs = rhs.strip()
+        # type signature: balanced parens for tuples, else up to first space
+        if rhs.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            sig, rest = rhs[:i + 1], rhs[i + 1:].strip()
+        else:
+            sp = rhs.find(" ")
+            if sp < 0:
+                return None
+            sig, rest = rhs[:sp], rhs[sp + 1:].strip()
+        par = rest.find("(")
+        if par < 0:
+            return None
+        opcode = rest[:par].strip()
+        body = rest[par + 1:]
+        depth, i, args = 1, 0, ""
+        for i, ch in enumerate(body):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        attrs = body[i + 1:]
+        out_bytes, out_shapes = _type_info(sig)
+        operands = _OPERAND_RE.findall(args)
+        return Op(name, opcode, out_bytes, out_shapes, operands, attrs)
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if cur is None:
+                s = line.strip()
+                if s.endswith("{") and "->" in s and (
+                        s.startswith("%") or s.startswith("ENTRY")):
+                    is_entry = s.startswith("ENTRY")
+                    cname = s.split()[1] if is_entry else s.split()[0]
+                    cname = cname.split("(")[0].strip().lstrip("%")
+                    cur = cname
+                    self.comps[cur] = []
+                    if is_entry:
+                        self.entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            op = self._parse_op_line(line)
+            if op is not None:
+                self.comps[cur].append(op)
+
+    # ------------------------------------------------------------------
+    def _op_output(self, comp: str, name: str) -> Optional[Op]:
+        for op in self.comps[comp]:
+            if op.name == name:
+                return op
+        return None
+
+    def cost(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = Cost()  # cycle guard
+        total = Cost()
+        table = {op.name: op for op in self.comps.get(comp_name, [])}
+        for op in self.comps.get(comp_name, []):
+            oc = op.opcode
+            if oc in _FREE_OPS:
+                continue
+            operand_bytes = sum(
+                table[o].out_bytes for o in op.operands if o in table)
+            iface = Cost(bytes=_op_traffic(op, table, self.comps))
+
+            base = oc.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not oc.endswith("-done"):
+                factor = _COLLECTIVES[base]
+                size = max(op.out_bytes, operand_bytes)
+                iface.coll[base] = {"count": 1.0, "bytes": factor * size}
+                total.add(iface)
+                continue
+            if oc == "fusion":
+                m = _CALLS_RE.search(op.attrs)
+                if m:
+                    inner = self.cost(m.group(1))
+                    iface.flops += inner.flops      # dots inside fusions
+                    for k, v in inner.coll.items():
+                        iface.coll[k] = dict(v)
+                total.add(iface)
+                continue
+            if oc == "while":
+                trips = 1.0
+                mt = _TRIP_RE.search(op.attrs)
+                if mt:
+                    trips = float(mt.group(1))
+                mb = _BODY_RE.search(op.attrs)
+                mc = _COND_RE.search(op.attrs)
+                if mb:
+                    total.add(self.cost(mb.group(1)), trips)
+                if mc:
+                    total.add(self.cost(mc.group(1)), trips)
+                continue
+            if oc == "conditional":
+                m = _BRANCH_RE.search(op.attrs)
+                if m:
+                    branches = _OPERAND_RE.findall(m.group(1))
+                    if branches:
+                        costs = [self.cost(b) for b in branches]
+                        worst = max(costs, key=lambda c: (c.flops, c.bytes))
+                        total.add(worst)
+                total.add(iface)
+                continue
+            if oc in ("call", "custom-call", "async-start"):
+                m = _CALLS_RE.search(op.attrs) or _TOAPPLY_RE.search(op.attrs)
+                if m:
+                    total.add(self.cost(m.group(1)))
+                total.add(iface)
+                continue
+            if oc == "dot":
+                lhs = table.get(op.operands[0]) if op.operands else None
+                cdims = _LHS_C_RE.search(op.attrs)
+                contract = 1
+                if lhs is not None and cdims and lhs.out_shapes:
+                    dims = lhs.out_shapes[0][1]
+                    for ci in cdims.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            contract *= dims[int(ci)]
+                out_elems = 1
+                if op.out_shapes:
+                    for dsz in op.out_shapes[0][1]:
+                        out_elems *= dsz
+                iface.flops += 2.0 * out_elems * contract
+                total.add(iface)
+                continue
+            if oc == "convolution":
+                out_elems = 1
+                if op.out_shapes:
+                    for dsz in op.out_shapes[0][1]:
+                        out_elems *= dsz
+                # approx: 2 × out × kernel elems / out_features
+                k_elems = 1
+                if len(op.operands) > 1 and op.operands[1] in table:
+                    for dsz in table[op.operands[1]].out_shapes[0][1]:
+                        k_elems *= dsz
+                iface.flops += 2.0 * out_elems * max(1, k_elems) ** 0.5
+                total.add(iface)
+                continue
+            if oc in ("reduce", "reduce-window"):
+                in_elems = operand_bytes / 4.0
+                iface.flops += in_elems
+                total.add(iface)
+                continue
+            # default: elementwise / data movement — bytes only
+            total.add(iface)
+        self._memo[comp_name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.cost(self.entry)
+
+
+def analyze_hlo(hlo_text: str) -> Dict:
+    c = HloCostModel(hlo_text).entry_cost()
+    return {"flops": c.flops, "bytes": c.bytes, "collectives": c.coll}
+
+
+def top_costs(hlo_text: str, k: int = 20) -> List[Dict]:
+    """Profiler view: leaf ops ranked by bytes×trips — the 'where is the
+    HBM traffic' answer the hillclimb loop needs."""
+    model = HloCostModel(hlo_text)
+    entries: Dict[str, Dict] = {}
+
+    def walk(comp_name: str, mult: float, depth: int = 0):
+        if depth > 40:
+            return
+        table = {op.name: op for op in model.comps.get(comp_name, [])}
+        for op in model.comps.get(comp_name, []):
+            oc = op.opcode
+            if oc in _FREE_OPS:
+                continue
+            if oc == "while":
+                trips = 1.0
+                mt = _TRIP_RE.search(op.attrs)
+                if mt:
+                    trips = float(mt.group(1))
+                mb = _BODY_RE.search(op.attrs)
+                if mb:
+                    walk(mb.group(1), mult * trips, depth + 1)
+                continue
+            if oc == "conditional":
+                m = _BRANCH_RE.search(op.attrs)
+                if m:
+                    branches = _OPERAND_RE.findall(m.group(1))
+                    costs = [(model.cost(b), b) for b in branches]
+                    if costs:
+                        _, worst = max(costs,
+                                       key=lambda cb: (cb[0].flops,
+                                                       cb[0].bytes))
+                        walk(worst, mult, depth + 1)
+                continue
+            if oc in ("call", "custom-call"):
+                m = _CALLS_RE.search(op.attrs) or _TOAPPLY_RE.search(op.attrs)
+                if m:
+                    walk(m.group(1), mult, depth + 1)
+                continue
+            by = _op_traffic(op, table, model.comps) * mult
+            fl = 0.0
+            if oc == "fusion":
+                m = _CALLS_RE.search(op.attrs)
+                if m:
+                    fl = model.cost(m.group(1)).flops * mult
+            elif oc == "dot":
+                fl = model.cost(comp_name).flops  # approx; not per-op
+            key = f"{comp_name}/{op.name}"
+            meta = ""
+            mmeta = re.search(r'op_name="([^"]*)"', op.attrs)
+            if mmeta:
+                meta = mmeta.group(1)[-80:]
+            entries[key] = {"op": op.name, "opcode": oc, "bytes": by,
+                            "flops": fl, "mult": mult, "where": meta,
+                            "out_shapes": op.out_shapes[:2]}
+    walk(model.entry, 1.0)
+    return sorted(entries.values(), key=lambda e: -e["bytes"])[:k]

@@ -1,0 +1,356 @@
+"""Chunked gated linear attention (GLA) — the shared engine for Mamba2
+(SSD) and xLSTM's mLSTM, plus the sLSTM recurrent cell.
+
+Recurrence (per batch, head):   S_t = a_t · S_{t-1} + k_t ⊗ v_t
+Output:                          y_t = S_t^T q_t
+with a_t = exp(g_t), g_t ≤ 0. The chunked form (chunk length cl) computes
+an intra-chunk quadratic term (L ∘ (Q Kᵀ)) V and carries the (N, P) state
+across chunks with a lax.scan — O(S·cl) work, O(S/cl) sequential steps,
+no O(S) state materialization. This is the TPU-native adaptation of both
+Mamba2's SSD algorithm and chunked mLSTM (DESIGN.md §3).
+
+Numerics: decay factors are computed as exp(cum_t − cum_j) with j ≤ t
+(always ≤ 1 since g ≤ 0) — no overflow; gates are log-sigmoid bounded
+(documented deviation from xLSTM's exp-gate + max-stabilizer).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.spec import TensorSpec
+from repro.models.layers import rmsnorm, spec_rmsnorm
+
+
+# ----------------------------------------------------------------------
+# chunked GLA core
+# ----------------------------------------------------------------------
+def gla_chunked(q, k, v, g, state, chunk: int):
+    """q, k: (B, S, H, N); v: (B, S, H, P); g: (B, S, H) log-decay ≤ 0;
+    state: (B, H, N, P) incoming. Returns (y (B,S,H,P), state_out)."""
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    cl = min(chunk, S)
+    pad = (-S) % cl
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v, g = zf(q), zf(k), zf(v), zf(g)
+    nc = q.shape[1] // cl
+    resh = lambda x: x.reshape((B, nc, cl) + x.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, gc = resh(q), resh(k), resh(v), resh(g)   # (nc, B, cl, ...)
+
+    def step(S_in, xs):
+        qq, kk, vv, gg = xs                       # (B, cl, H, *)
+        cum = jnp.cumsum(gg.astype(jnp.float32), axis=1)   # (B, cl, H)
+        cum_h = cum.transpose(0, 2, 1)            # (B, H, cl)
+        total = cum_h[:, :, -1]                   # (B, H)
+
+        # intra-chunk: A_tj = (q_t·k_j)·exp(cum_t − cum_j), j ≤ t
+        qk = jnp.einsum("blhn,bmhn->bhlm", qq.astype(jnp.float32),
+                        kk.astype(jnp.float32))
+        diff = cum_h[:, :, :, None] - cum_h[:, :, None, :]
+        tri = jnp.tril(jnp.ones((cl, cl), bool))
+        # mask BEFORE exp: masked entries would overflow (diff > 0 above
+        # the diagonal) and poison the backward pass via 0·inf = NaN
+        dmat = jnp.exp(jnp.where(tri[None, None], diff, -1e30))
+        y_intra = jnp.einsum("bhlm,bmhp->blhp", qk * dmat,
+                             vv.astype(jnp.float32))
+
+        # inter-chunk: y_t += exp(cum_t) · q_t S_in
+        y_inter = jnp.einsum("blhn,bhnp->blhp", qq.astype(jnp.float32),
+                             S_in) * jnp.exp(cum)[..., None]
+
+        # state: S_out = exp(total)·S_in + Σ_j exp(total − cum_j) k_j ⊗ v_j
+        k_hat = kk.astype(jnp.float32) * jnp.exp(
+            total[:, None, :] - cum)[..., None]
+        S_out = S_in * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "blhn,blhp->bhnp", k_hat, vv.astype(jnp.float32))
+        return S_out, (y_intra + y_inter).astype(v.dtype)
+
+    state = state.astype(jnp.float32)
+    state_out, ys = jax.lax.scan(step, state, (qc, kc, vc, gc))
+    y = ys.swapaxes(0, 1).reshape(B, nc * cl, H, P)[:, :S]
+    return y, state_out
+
+
+def gla_step(q, k, v, g, state):
+    """Single decode step. q/k: (B, H, N); v: (B, H, P); g: (B, H);
+    state (B, H, N, P) fp32. Returns (y (B,H,P), new_state)."""
+    a = jnp.exp(g.astype(jnp.float32))[..., None, None]
+    state = state * a + jnp.einsum("bhn,bhp->bhnp", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ----------------------------------------------------------------------
+# causal depthwise conv (mamba2 / mlstm front-end), width w
+# ----------------------------------------------------------------------
+def causal_conv(x, w_conv, conv_state=None):
+    """x: (B, S, C); w_conv: (W, C) depthwise taps. Training: left-pad
+    zeros. Decode (S==1): use conv_state (B, W-1, C), return new state."""
+    W = w_conv.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w_conv[i].astype(x.dtype)
+              for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return out, new_state
+
+
+# ----------------------------------------------------------------------
+# Mamba2 block (SSD)
+# ----------------------------------------------------------------------
+def spec_mamba2(cfg: ArchConfig) -> Dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * N
+    return {
+        "norm": spec_rmsnorm(d),
+        "in_proj": TensorSpec((d, 2 * di + 2 * N + H), ("embed", "ssm_in"),
+                              init="normal", scale=d ** -0.5),
+        "conv_w": TensorSpec((cfg.ssm_conv, conv_ch), (None, "ssm_in"),
+                             init="normal", scale=0.1),
+        "A_log": TensorSpec((H,), ("ssm_heads",), init="zeros"),
+        "D": TensorSpec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": TensorSpec((H,), ("ssm_heads",), init="zeros"),
+        "out_norm": spec_rmsnorm(di),
+        "out_proj": TensorSpec((di, d), ("ssm_in", "embed"), init="normal",
+                               scale=di ** -0.5),
+    }
+
+
+def mamba2_cache_spec(cfg: ArchConfig, batch: int) -> Dict:
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv": TensorSpec((batch, cfg.ssm_conv - 1, di + 2 * N),
+                           ("batch", None, "ssm_in"), init="zeros",
+                           dtype=cfg.dtype),
+        "ssd": TensorSpec((batch, H, N, P), ("batch", "ssm_heads", None,
+                                             None), init="zeros",
+                          dtype=jnp.float32),
+    }
+
+
+def _mamba2_project(params, cfg: ArchConfig, x):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    zxbcdt = h @ params["in_proj"].astype(h.dtype)
+    z, xbc, dt_pre = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    return z, xbc, dt_pre
+
+
+def _mamba2_ssd_inputs(cfg: ArchConfig, params, xbc_conv, dt_pre):
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    x, Bmat, Cmat = jnp.split(xbc_conv, [di, di + N], axis=-1)
+    lead = x.shape[:-1]
+    xh = x.reshape(lead + (H, P))
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))       # (H,) < 0
+    g = dt * a                                              # log decay ≤ 0
+    v = xh * dt[..., None].astype(xh.dtype)
+    # B/C shared across heads (ngroups=1): broadcast
+    k = jnp.broadcast_to(Bmat[..., None, :], lead + (H, N))
+    q = jnp.broadcast_to(Cmat[..., None, :], lead + (H, N))
+    return q, k, v, g, xh
+
+
+def mamba2_apply(params, cfg: ArchConfig, x, cache=None, decode=False):
+    """x: (B, S, d). Returns (y, new_cache)."""
+    di, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_pre = _mamba2_project(params, cfg, x)
+    if decode:
+        xbc_c, conv_state = causal_conv(xbc, params["conv_w"], cache["conv"])
+        xbc_c = jax.nn.silu(xbc_c)
+        q, k, v, g, xh = _mamba2_ssd_inputs(cfg, params, xbc_c, dt_pre)
+        sq = lambda t: t[:, 0]
+        y, ssd = gla_step(sq(q), sq(k), sq(v), sq(g), cache["ssd"])
+        y = y[:, None]
+        xh_ = xh
+    else:
+        xbc_c, conv_tail = causal_conv(xbc, params["conv_w"])
+        xbc_c = jax.nn.silu(xbc_c)
+        q, k, v, g, xh = _mamba2_ssd_inputs(cfg, params, xbc_c, dt_pre)
+        state0 = jnp.zeros((x.shape[0], H, cfg.ssm_state, P), jnp.float32) \
+            if cache is None else cache["ssd"]
+        y, ssd = gla_chunked(q, k, v, g, state0, cfg.ssm_chunk)
+        conv_state = conv_tail if cache is not None else None
+        xh_ = xh
+    y = y + params["D"].astype(y.dtype)[:, None] * xh_
+    y = y.reshape(x.shape[0], -1, di)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(y.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": conv_state.astype(cfg.dtype), "ssd": ssd}
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------
+# mLSTM block (xLSTM matrix cell)
+# ----------------------------------------------------------------------
+def spec_mlstm(cfg: ArchConfig) -> Dict:
+    d, di = cfg.d_model, cfg.lstm_inner
+    H = cfg.num_heads
+    return {
+        "norm": spec_rmsnorm(d),
+        "up_proj": TensorSpec((d, 2 * di), ("embed", "lstm_in"),
+                              init="normal", scale=d ** -0.5),
+        "conv_w": TensorSpec((cfg.lstm_conv, di), (None, "lstm_in"),
+                             init="normal", scale=0.1),
+        "wq": TensorSpec((di, di), ("lstm_in", "lstm_in2"), init="normal",
+                         scale=di ** -0.5),
+        "wk": TensorSpec((di, di), ("lstm_in", "lstm_in2"), init="normal",
+                         scale=di ** -0.5),
+        "wv": TensorSpec((di, di), ("lstm_in", "lstm_in2"), init="normal",
+                         scale=di ** -0.5),
+        "w_gates": TensorSpec((di, 2 * H), ("lstm_in", None), init="zeros"),
+        "b_gates": TensorSpec((2 * H,), (None,), init="zeros"),
+        "out_norm": spec_rmsnorm(di),
+        "down_proj": TensorSpec((di, d), ("lstm_in", "embed"),
+                                init="normal", scale=di ** -0.5),
+    }
+
+
+def mlstm_cache_spec(cfg: ArchConfig, batch: int) -> Dict:
+    H, N, P = cfg.num_heads, cfg.lstm_head_qk, cfg.lstm_head_v
+    return {
+        "conv": TensorSpec((batch, cfg.lstm_conv - 1, cfg.lstm_inner),
+                           ("batch", None, "lstm_in"), init="zeros",
+                           dtype=cfg.dtype),
+        # value dim augmented with the normalizer channel (+1)
+        "S": TensorSpec((batch, H, N, P + 1), ("batch", "lstm_heads", None,
+                                               None), init="zeros",
+                        dtype=jnp.float32),
+    }
+
+
+def _mlstm_qkvg(params, cfg: ArchConfig, x_in, conv_state):
+    B = x_in.shape[0]
+    H = cfg.num_heads
+    N, P = cfg.lstm_head_qk, cfg.lstm_head_v
+    up = x_in @ params["up_proj"].astype(x_in.dtype)
+    xm, zg = jnp.split(up, 2, axis=-1)
+    xc, new_conv = causal_conv(xm, params["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    S = xc.shape[1]
+    q = (xc @ params["wq"].astype(xc.dtype)).reshape(B, S, H, N)
+    k = (xc @ params["wk"].astype(xc.dtype)).reshape(B, S, H, N) \
+        * (N ** -0.5)
+    v = (xm @ params["wv"].astype(xm.dtype)).reshape(B, S, H, P)
+    gates = xc @ params["w_gates"].astype(xc.dtype) \
+        + params["b_gates"].astype(xc.dtype)
+    i_pre, f_pre = jnp.split(gates.astype(jnp.float32), 2, axis=-1)
+    g = -jax.nn.softplus(-f_pre)           # log sigmoid ≤ 0 (stable decay)
+    i_gate = jax.nn.sigmoid(i_pre)         # bounded input gate
+    k = k * i_gate[..., None].astype(k.dtype)
+    # augment v with normalizer channel: n_t = Σ decay · i_j k_j tracked as
+    # the (P+1)-th value channel via v_aug = [v, 1]
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    return q, k, v_aug, g, zg, new_conv
+
+
+def mlstm_apply(params, cfg: ArchConfig, x, cache=None, decode=False):
+    B = x.shape[0]
+    H, N, P = cfg.num_heads, cfg.lstm_head_qk, cfg.lstm_head_v
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    conv_state = cache["conv"] if decode else None
+    q, k, v_aug, g, zg, new_conv = _mlstm_qkvg(params, cfg, h, conv_state)
+    if decode:
+        sq = lambda t: t[:, 0]
+        y_aug, S_new = gla_step(sq(q), sq(k), sq(v_aug), sq(g), cache["S"])
+        y_aug = y_aug[:, None]
+    else:
+        state0 = jnp.zeros((B, H, N, P + 1), jnp.float32) if cache is None \
+            else cache["S"]
+        y_aug, S_new = gla_chunked(q, k, v_aug, g, state0, cfg.ssm_chunk)
+        # new_conv from _mlstm_qkvg is already the trailing W-1 inputs
+    y, nq = y_aug[..., :P], y_aug[..., P:]
+    y = y / jnp.maximum(jnp.abs(nq), 1.0).astype(y.dtype)
+    y = y.reshape(B, -1, cfg.lstm_inner)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps) * jax.nn.silu(zg)
+    out = y @ params["down_proj"].astype(y.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cfg.dtype), "S": S_new}
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------
+# sLSTM block (scalar cell, sequential scan — not parallelizable, per the
+# xLSTM paper)
+# ----------------------------------------------------------------------
+def spec_slstm(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    return {
+        "norm": spec_rmsnorm(d),
+        "w_in": TensorSpec((d, 4 * d), ("embed", "lstm_in"), init="normal",
+                           scale=d ** -0.5),
+        "r": TensorSpec((4, H, dh, dh), (None, "lstm_heads", None, None),
+                        init="normal", scale=dh ** -0.5),
+        "b": TensorSpec((4 * d,), (None,), init="zeros"),
+        "out_norm": spec_rmsnorm(d),
+        "out_proj": TensorSpec((d, d), ("embed", "embed2"), init="normal",
+                               scale=d ** -0.5),
+    }
+
+
+def slstm_cache_spec(cfg: ArchConfig, batch: int) -> Dict:
+    H, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    mk = lambda: TensorSpec((batch, H, dh), ("batch", "lstm_heads", None),
+                            init="zeros", dtype=jnp.float32)
+    return {"c": mk(), "n": mk(), "h": mk()}
+
+
+def _slstm_cell(params, cfg: ArchConfig, wx_t, state):
+    """One recurrence step. wx_t: (B, 4d) input projection at t."""
+    H = cfg.num_heads
+    d = cfg.d_model
+    dh = d // H
+    c, n, hprev = state                      # (B, H, dh) each
+    rec = jnp.einsum("bhd,ghde->bghe", hprev, params["r"].astype(jnp.float32))
+    pre = wx_t.astype(jnp.float32).reshape(-1, 4, H, dh) + rec \
+        + params["b"].astype(jnp.float32).reshape(4, H, dh)
+    i = jax.nn.sigmoid(pre[:, 0])            # bounded gates (see module doc)
+    f = jax.nn.sigmoid(pre[:, 1])
+    z = jnp.tanh(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new)
+
+
+def slstm_apply(params, cfg: ArchConfig, x, cache=None, decode=False):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    hin = rmsnorm(params["norm"], x, cfg.norm_eps)
+    wx = hin @ params["w_in"].astype(hin.dtype)          # (B, S, 4d)
+    if cache is None:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        state = (zeros, zeros, zeros)
+    else:
+        state = (cache["c"], cache["n"], cache["h"])
+    if decode:
+        state = _slstm_cell(params, cfg, wx[:, 0], state)
+        y = state[2][:, None].reshape(B, 1, d).astype(x.dtype)
+    else:
+        def step(st, wx_t):
+            st = _slstm_cell(params, cfg, wx_t, st)
+            return st, st[2]
+        state, ys = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+        y = ys.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps)
+    out = y @ params["out_proj"].astype(y.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": state[0], "n": state[1], "h": state[2]}
+    return out, new_cache

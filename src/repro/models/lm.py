@@ -1,0 +1,446 @@
+"""Unified pattern-scan language model.
+
+Layer stack = `num_groups` × `pattern` (params stacked on a leading group
+axis, executed with lax.scan → compact HLO, fast AOT compile for the
+40-cell dry-run) + unscanned `tail` blocks. Zamba2-style shared
+attention blocks are invoked at every group boundary via lax.switch
+(weights shared across groups; per-invocation KV caches are stacked on
+the group axis).
+
+Entry points:
+  spec_params / spec_caches — TensorSpec trees (single source of truth)
+  lm_loss                   — training loss (chunked softmax CE: logits
+                              are never materialized for the full
+                              sequence — O(B·chunk·V) live, see DESIGN)
+  prefill                   — run prompt, write caches, last-pos logits
+  decode_step               — one token in, caches updated
+
+Conventions: `batch` dicts carry "tokens" (B, S) int32, or
+"embeddings"/"targets" for stub-frontend archs (hubert), or
+"prefix_embeddings"+"tokens" for VLM (paligemma).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, ATTN_KINDS
+from repro.models.spec import TensorSpec, stack_specs
+from repro.models.layers import (spec_attention, attention_apply, spec_mlp,
+                                 mlp_apply, spec_moe, moe_apply,
+                                 spec_rmsnorm, rmsnorm, attn_cache_spec)
+from repro.models.gla import (spec_mamba2, mamba2_apply, mamba2_cache_spec,
+                              spec_mlstm, mlstm_apply, mlstm_cache_spec,
+                              spec_slstm, slstm_apply, slstm_cache_spec)
+from repro.kernels.ops import multi_head_attention
+
+PyTree = Any
+
+
+def _constrain(h, spec):
+    """Activation sharding constraint ((B, S, d) PartitionSpec). Without
+    this, gathers (token embedding) derail SPMD propagation and all
+    downstream compute silently loses its batch sharding."""
+    if spec is None:
+        return h
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+# ----------------------------------------------------------------------
+# specs
+# ----------------------------------------------------------------------
+def spec_block(cfg: ArchConfig, kind: str) -> Dict:
+    if kind in ("attn", "local", "enc"):
+        return {"attn": spec_attention(cfg), "mlp": spec_mlp(cfg)}
+    if kind == "moe":
+        return {"attn": spec_attention(cfg), "moe": spec_moe(cfg)}
+    if kind == "mamba2":
+        return {"mamba2": spec_mamba2(cfg)}
+    if kind == "mlstm":
+        return {"mlstm": spec_mlstm(cfg)}
+    if kind == "slstm":
+        return {"slstm": spec_slstm(cfg)}
+    raise ValueError(kind)
+
+
+def cache_spec_block(cfg: ArchConfig, kind: str, batch: int,
+                     max_seq: int) -> Dict:
+    if kind in ("attn", "local", "enc", "moe"):
+        return {"attn": attn_cache_spec(cfg, batch, max_seq, kind)}
+    if kind == "mamba2":
+        return {"mamba2": mamba2_cache_spec(cfg, batch)}
+    if kind == "mlstm":
+        return {"mlstm": mlstm_cache_spec(cfg, batch)}
+    if kind == "slstm":
+        return {"slstm": slstm_cache_spec(cfg, batch)}
+    raise ValueError(kind)
+
+
+def spec_params(cfg: ArchConfig) -> Dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    specs: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens" or cfg.num_prefix_embeddings:
+        specs["embed"] = TensorSpec((V, d), ("vocab", "embed"),
+                                    init="normal", scale=0.02)
+    specs["groups"] = {
+        f"p{i}": stack_specs(spec_block(cfg, k), cfg.num_groups, "layers")
+        for i, k in enumerate(cfg.pattern)}
+    if cfg.tail:
+        specs["tail"] = {f"t{i}": spec_block(cfg, k)
+                         for i, k in enumerate(cfg.tail)}
+    if cfg.shared_attn:
+        specs["shared"] = {f"s{i}": {"attn": spec_attention(cfg),
+                                     "mlp": spec_mlp(cfg)}
+                           for i in range(cfg.shared_attn_count)}
+    specs["final_norm"] = spec_rmsnorm(d)
+    if not cfg.tie_embeddings or "embed" not in specs:
+        specs["lm_head"] = TensorSpec((d, V), ("embed", "vocab"),
+                                      init="normal", scale=d ** -0.5)
+    return specs
+
+
+def spec_caches(cfg: ArchConfig, batch: int, max_seq: int) -> Dict:
+    caches: Dict[str, Any] = {
+        "groups": {f"p{i}": stack_specs(
+            cache_spec_block(cfg, k, batch, max_seq), cfg.num_groups,
+            "layers") for i, k in enumerate(cfg.pattern)}}
+    if cfg.tail:
+        caches["tail"] = {f"t{i}": cache_spec_block(cfg, k, batch, max_seq)
+                          for i, k in enumerate(cfg.tail)}
+    if cfg.shared_attn:
+        caches["shared"] = stack_specs(
+            attn_cache_spec(cfg, batch, max_seq, "attn"), cfg.num_groups,
+            "layers")
+    return caches
+
+
+# ----------------------------------------------------------------------
+# block application
+# ----------------------------------------------------------------------
+def _apply_block(params, cfg: ArchConfig, kind: str, h, *, positions,
+                 attn_fn, cache, decode_pos):
+    aux = jnp.zeros((), jnp.float32)
+    decode = decode_pos is not None
+    if kind in ("attn", "local", "enc", "moe"):
+        y, nc = attention_apply(
+            params["attn"], cfg, h, kind=kind, positions=positions,
+            attn_fn=attn_fn, cache=None if cache is None else cache["attn"],
+            decode_pos=decode_pos)
+        h = h + y
+        if kind == "moe":
+            y2, aux = moe_apply(params["moe"], cfg, h)
+        else:
+            y2 = mlp_apply(params["mlp"], cfg, h)
+        h = h + y2
+        new_cache = None if cache is None else {"attn": nc}
+    elif kind == "mamba2":
+        y, nc = mamba2_apply(params["mamba2"], cfg, h,
+                             cache=None if cache is None else cache["mamba2"],
+                             decode=decode)
+        h = h + y
+        new_cache = None if cache is None else {"mamba2": nc}
+    elif kind == "mlstm":
+        y, nc = mlstm_apply(params["mlstm"], cfg, h,
+                            cache=None if cache is None else cache["mlstm"],
+                            decode=decode)
+        h = h + y
+        new_cache = None if cache is None else {"mlstm": nc}
+    elif kind == "slstm":
+        y, nc = slstm_apply(params["slstm"], cfg, h,
+                            cache=None if cache is None else cache["slstm"],
+                            decode=decode)
+        h = h + y
+        new_cache = None if cache is None else {"slstm": nc}
+    else:
+        raise ValueError(kind)
+    return h, new_cache, aux
+
+
+def _apply_shared(shared_params, cfg: ArchConfig, h, gidx, *, positions,
+                  attn_fn, cache, decode_pos):
+    """Zamba2 shared block: lax.switch over the alternating shared
+    weights. Both branches produce identical cache structure."""
+    n = cfg.shared_attn_count
+
+    def mk(i):
+        def f(operands):
+            hh, cc = operands
+            p = shared_params[f"s{i}"]
+            y, nc = attention_apply(p["attn"], cfg, hh, kind="attn",
+                                    positions=positions, attn_fn=attn_fn,
+                                    cache=cc, decode_pos=decode_pos)
+            hh = hh + y
+            hh = hh + mlp_apply(p["mlp"], cfg, hh)
+            if nc is None:  # keep switch branch structures identical
+                nc = cc
+            return hh, nc
+        return f
+
+    if cache is None:
+        # training: no cache pytree through switch
+        def mk2(i):
+            def f(hh):
+                p = shared_params[f"s{i}"]
+                y, _ = attention_apply(p["attn"], cfg, hh, kind="attn",
+                                       positions=positions, attn_fn=attn_fn,
+                                       cache=None, decode_pos=None)
+                hh = hh + y
+                return hh + mlp_apply(p["mlp"], cfg, hh)
+            return f
+        h = jax.lax.switch(gidx % n, [mk2(i) for i in range(n)], h)
+        return h, None
+    h, nc = jax.lax.switch(gidx % n, [mk(i) for i in range(n)], (h, cache))
+    return h, nc
+
+
+# ----------------------------------------------------------------------
+# forward body
+# ----------------------------------------------------------------------
+def _run_body(params, cfg: ArchConfig, h, *, positions, attn_fn,
+              caches: Optional[PyTree], decode_pos,
+              remat: bool, act_spec=None) -> Tuple[jnp.ndarray,
+                                                   Optional[PyTree],
+                                                   jnp.ndarray]:
+    G = cfg.num_groups
+    h = _constrain(h, act_spec)
+    gidx_arr = jnp.arange(G, dtype=jnp.int32)
+
+    if caches is None:
+        def group_fn(carry, xs):
+            hh, aux = carry
+            gp, gidx = xs
+            for i, kind in enumerate(cfg.pattern):
+                hh, _, a = _apply_block(gp[f"p{i}"], cfg, kind, hh,
+                                        positions=positions, attn_fn=attn_fn,
+                                        cache=None, decode_pos=None)
+                aux = aux + a
+            if cfg.shared_attn:
+                hh, _ = _apply_shared(params["shared"], cfg, hh, gidx,
+                                      positions=positions, attn_fn=attn_fn,
+                                      cache=None, decode_pos=None)
+            return (_constrain(hh, act_spec), aux), None
+
+        fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.nothing_saveable) \
+            if remat else group_fn
+        (h, aux), _ = jax.lax.scan(fn, (h, jnp.zeros((), jnp.float32)),
+                                   (params["groups"], gidx_arr))
+        new_caches = None
+    else:
+        def group_fn(carry, xs):
+            hh, aux = carry
+            gp, gcache, shared_c, gidx = xs
+            new_gc = {}
+            for i, kind in enumerate(cfg.pattern):
+                hh, nc, a = _apply_block(gp[f"p{i}"], cfg, kind, hh,
+                                         positions=positions,
+                                         attn_fn=attn_fn,
+                                         cache=gcache[f"p{i}"],
+                                         decode_pos=decode_pos)
+                new_gc[f"p{i}"] = nc
+                aux = aux + a
+            new_shared = shared_c
+            if cfg.shared_attn:
+                hh, new_shared = _apply_shared(
+                    params["shared"], cfg, hh, gidx, positions=positions,
+                    attn_fn=attn_fn, cache=shared_c, decode_pos=decode_pos)
+            return (_constrain(hh, act_spec), aux), (new_gc, new_shared)
+
+        shared_caches = caches.get("shared") if cfg.shared_attn else \
+            jnp.zeros((G,), jnp.float32)  # dummy scan xs
+        fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.nothing_saveable) \
+            if remat else group_fn
+        (h, aux), (new_group_caches, new_shared) = jax.lax.scan(
+            fn, (h, jnp.zeros((), jnp.float32)),
+            (params["groups"], caches["groups"], shared_caches, gidx_arr))
+        new_caches = {"groups": new_group_caches}
+        if cfg.shared_attn:
+            new_caches["shared"] = new_shared
+
+    # tail (unscanned)
+    if cfg.tail:
+        new_tail = {}
+        for i, kind in enumerate(cfg.tail):
+            c = None if caches is None else caches["tail"][f"t{i}"]
+            h, nc, a = _apply_block(params["tail"][f"t{i}"], cfg, kind, h,
+                                    positions=positions, attn_fn=attn_fn,
+                                    cache=c, decode_pos=decode_pos)
+            new_tail[f"t{i}"] = nc
+            aux = aux + a
+        if new_caches is not None:
+            new_caches["tail"] = new_tail
+
+    return h, new_caches, aux
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch: Dict) -> Tuple[jnp.ndarray,
+                                                                 jnp.ndarray]:
+    """Returns (h (B,S,d) in compute dtype, loss targets+mask info handled
+    by caller)."""
+    dt = cfg.dtype
+    if cfg.input_mode == "embeddings":
+        return batch["embeddings"].astype(dt)
+    tok_emb = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    if cfg.emb_scale_by_sqrt_dim:
+        tok_emb = tok_emb * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.num_prefix_embeddings:
+        pfx = batch["prefix_embeddings"].astype(dt)
+        tok_emb = jnp.concatenate([pfx, tok_emb], axis=1)
+    return tok_emb
+
+
+def _head_weight(params, cfg: ArchConfig):
+    if "lm_head" in params:
+        return params["lm_head"]
+    return params["embed"].T
+
+
+# ----------------------------------------------------------------------
+# training loss (chunked softmax CE)
+# ----------------------------------------------------------------------
+def lm_loss(params, cfg: ArchConfig, batch: Dict, *,
+            attn_fn: Callable = multi_head_attention,
+            remat: bool = True, loss_chunk: int = 512,
+            moe_aux_weight: float = 0.01,
+            act_spec=None) -> Tuple[jnp.ndarray, Dict]:
+    h = _embed_inputs(params, cfg, batch)
+    B, S, d = h.shape
+    positions = jnp.arange(S)
+
+    h, _, aux = _run_body(params, cfg, h, positions=positions,
+                          attn_fn=attn_fn, caches=None, decode_pos=None,
+                          remat=remat, act_spec=act_spec)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+
+    # targets: next-token for LMs; frame-aligned for encoders
+    if cfg.input_mode == "embeddings":
+        targets = batch["targets"]
+        mask = jnp.ones_like(targets, jnp.float32)
+    elif cfg.num_prefix_embeddings:
+        npfx = cfg.num_prefix_embeddings
+        tok = batch["tokens"]
+        tgt_text = jnp.concatenate(
+            [tok[:, 1:], jnp.zeros((B, 1), tok.dtype)], 1)
+        targets = jnp.concatenate(
+            [jnp.zeros((B, npfx), tok.dtype), tgt_text], 1)
+        m_text = jnp.concatenate(
+            [jnp.ones((B, tok.shape[1] - 1)), jnp.zeros((B, 1))], 1)
+        mask = jnp.concatenate([jnp.zeros((B, npfx)), m_text], 1) \
+            .astype(jnp.float32)
+    else:
+        tok = batch["tokens"]
+        targets = jnp.concatenate(
+            [tok[:, 1:], jnp.zeros((B, 1), tok.dtype)], 1)
+        mask = jnp.concatenate(
+            [jnp.ones((B, S - 1)), jnp.zeros((B, 1))], 1).astype(jnp.float32)
+
+    w = _head_weight(params, cfg)
+    cl = min(loss_chunk, S)
+    pad = (-S) % cl
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = h.shape[1] // cl
+    ch = lambda x: x.reshape((B, nc, cl) + x.shape[2:]).swapaxes(0, 1)
+
+    def chunk_fn(carry, xs):
+        hc, tc, mc = xs                       # (B, cl, d), (B, cl), (B, cl)
+        logits = jax.lax.dot_general(
+            hc, w.astype(hc.dtype), (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        logp = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(
+            logp, tc[..., None].astype(jnp.int32), -1)[..., 0]
+        correct = (logits.argmax(-1) == tc).astype(jnp.float32)
+        loss_sum, acc_sum = carry
+        return (loss_sum + (nll * mc).sum(),
+                acc_sum + (correct * mc).sum()), None
+
+    chunk_fn_ck = jax.checkpoint(chunk_fn)   # recompute logits in backward
+    (loss_sum, acc_sum), _ = jax.lax.scan(
+        chunk_fn_ck, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (ch(h), ch(targets), ch(mask)))
+
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = loss_sum / denom
+    metrics = {"ce": loss, "acc": acc_sum / denom, "tokens": denom}
+    if cfg.num_experts:
+        loss = loss + moe_aux_weight * aux / cfg.num_groups
+        metrics["moe_aux"] = aux
+    return loss, metrics
+
+
+def encode(params, cfg: ArchConfig, batch: Dict, *,
+           attn_fn: Callable = multi_head_attention,
+           remat: bool = False, act_spec=None) -> jnp.ndarray:
+    """Encoder-only forward (hubert 'prefill'): returns frame logits
+    (B, S, V) — the serving artifact for frame classification."""
+    h = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(h.shape[1])
+    h, _, _ = _run_body(params, cfg, h, positions=positions, attn_fn=attn_fn,
+                        caches=None, decode_pos=None, remat=remat,
+                        act_spec=act_spec)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    w = _head_weight(params, cfg)
+    return jax.lax.dot_general(h, w.astype(h.dtype),
+                               (((2,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------
+def prefill(params, cfg: ArchConfig, batch: Dict, caches: PyTree, *,
+            attn_fn: Callable = multi_head_attention,
+            remat: bool = False, act_spec=None) -> Tuple[jnp.ndarray,
+                                                         PyTree]:
+    """Run the prompt through the model, writing caches. Returns
+    (last-position logits (B, V), caches)."""
+    h = _embed_inputs(params, cfg, batch)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    h, new_caches, _ = _run_body(params, cfg, h, positions=positions,
+                                 attn_fn=attn_fn, caches=caches,
+                                 decode_pos=None, remat=remat,
+                                 act_spec=act_spec)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    last = h[:, -1]
+    logits = jax.lax.dot_general(
+        last, _head_weight(params, cfg).astype(last.dtype),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, new_caches
+
+
+def decode_step(params, cfg: ArchConfig, tokens: jnp.ndarray,
+                caches: PyTree, pos: jnp.ndarray, *,
+                attn_fn: Callable = multi_head_attention,
+                act_spec=None) -> Tuple[jnp.ndarray, PyTree]:
+    """One decode step. tokens: (B, 1) int32; pos: () int32 — position of
+    the incoming token. Returns (logits (B, V), new caches)."""
+    batch = {"tokens": tokens}
+    if cfg.input_mode == "embeddings":
+        raise ValueError("encoder-only archs have no decode step")
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.emb_scale_by_sqrt_dim:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    positions = pos[None]
+    h, new_caches, _ = _run_body(params, cfg, h, positions=positions,
+                                 attn_fn=attn_fn, caches=caches,
+                                 decode_pos=pos, remat=False,
+                                 act_spec=act_spec)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = jax.lax.dot_general(
+        h[:, 0], _head_weight(params, cfg).astype(h.dtype),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, new_caches

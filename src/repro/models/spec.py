@@ -1,0 +1,100 @@
+"""Single source of truth for parameter trees.
+
+Every block declares its parameters as a tree of `TensorSpec`s (shape +
+logical axes + init). From that one tree we materialize:
+
+  * real parameters        (init_tree)      — smoke tests / real training
+  * ShapeDtypeStructs      (shape_tree)     — AOT dry-run, zero allocation
+  * PartitionSpecs         (pspec_tree)     — pjit shardings via axis rules
+
+Logical axis names are mapped to mesh axes by a `ShardingRules` dict (see
+repro.dist.sharding). This guarantees params / shapes / shardings can
+never drift out of sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis name per dim
+    init: str = "normal"                  # normal|zeros|ones|glorot
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, TensorSpec)
+
+
+def _map_specs(fn: Callable[[TensorSpec], Any], tree):
+    return jax.tree_util.tree_map(fn, tree,
+                                  is_leaf=lambda x: isinstance(x, TensorSpec))
+
+
+def shape_tree(tree):
+    """ShapeDtypeStructs (no allocation) for .lower()."""
+    return _map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def pspec_tree(tree, rules: Dict[str, Any]):
+    """PartitionSpecs via logical-axis rules. rules maps axis name ->
+    mesh axis (str), tuple of mesh axes, or None (replicated)."""
+    def one(s: TensorSpec):
+        return P(*[rules.get(a) if a is not None else None for a in s.axes])
+    return _map_specs(one, tree)
+
+
+def init_tree(tree, key):
+    """Materialize real parameters. Deterministic per-leaf keys derived by
+    folding in the leaf path hash (stable across runs)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda x: isinstance(x, TensorSpec))
+    out = []
+    for i, s in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        elif s.init == "glorot":
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            fan_out = s.shape[-1]
+            sc = np.sqrt(6.0 / (fan_in + fan_out))
+            out.append(jax.random.uniform(k, s.shape, s.dtype, -sc, sc))
+        elif s.init == "normal":
+            out.append(jax.random.normal(k, s.shape, s.dtype) * s.scale)
+        else:
+            raise ValueError(s.init)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stack_specs(tree, n: int, axis_name: Optional[str] = "layers"):
+    """Prepend a stacking dim of size n (for scan-over-groups params)."""
+    return _map_specs(
+        lambda s: TensorSpec((n,) + s.shape, (axis_name,) + s.axes,
+                             s.init, s.scale, s.dtype), tree)
+
+
+def spec_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, TensorSpec))
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in leaves)
+
+
+def spec_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, TensorSpec))
+    return sum(int(np.prod(s.shape)) for s in leaves)

@@ -1,0 +1,8 @@
+from repro.nn.core import (glorot, he_normal, normal_init, zeros_init,
+                           ones_init, Policy, FP32, BF16_COMPUTE,
+                           accumulate_gradients, maybe_remat, count_params,
+                           tree_bytes, split_keys)
+from repro.nn.optim import (Optimizer, AdamState, adamw, sgd, apply_updates,
+                            constant_schedule, warmup_cosine_schedule,
+                            warmup_linear_schedule, clip_by_global_norm,
+                            global_norm)

@@ -1,0 +1,163 @@
+"""Parameter-pytree module helpers: initializers, precision policy,
+gradient accumulation, remat policies.
+
+No flax in this container — params are plain nested dicts; every model in
+repro.models / repro.core exposes `init(key, cfg) -> params` and pure
+`apply`-style functions. This keeps pjit shardings fully explicit (we
+annotate params with jax.sharding.PartitionSpec trees, see repro.dist).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------------
+# initializers
+# ----------------------------------------------------------------------
+def glorot(key, shape, dtype=jnp.float32, in_axis=-2, out_axis=-1):
+    fan_in, fan_out = shape[in_axis], shape[out_axis]
+    scale = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def he_normal(key, shape, dtype=jnp.float32, in_axis=-2):
+    fan_in = shape[in_axis]
+    return jax.random.normal(key, shape, dtype) * jnp.sqrt(2.0 / fan_in)
+
+
+def normal_init(key, shape, dtype=jnp.float32, stddev=0.02):
+    return jax.random.normal(key, shape, dtype) * stddev
+
+
+def zeros_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+# ----------------------------------------------------------------------
+# precision policy (mixed bf16 compute / fp32 params — TPU standard)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    output_dtype: Any = jnp.float32
+
+    def cast_to_compute(self, tree: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(self.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+    def cast_to_param(self, tree: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(self.param_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+    def cast_to_output(self, x):
+        return x.astype(self.output_dtype)
+
+
+FP32 = Policy(jnp.float32, jnp.float32, jnp.float32)
+BF16_COMPUTE = Policy(jnp.float32, jnp.bfloat16, jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# gradient accumulation: scan over microbatches, accumulate fp32 grads
+# ----------------------------------------------------------------------
+def accumulate_gradients(loss_fn: Callable, params: PyTree, batch: PyTree,
+                         num_microbatches: int, *loss_args,
+                         **loss_kw) -> Tuple[jnp.ndarray, PyTree, PyTree]:
+    """loss_fn(params, microbatch, *args, **kw) -> (loss, aux).
+
+    `batch` leaves must have leading dim divisible by num_microbatches.
+    Returns (mean loss, mean-aux, mean grads). With num_microbatches == 1
+    falls through to a single grad call (no scan overhead in HLO).
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if num_microbatches <= 1:
+        (loss, aux), grads = grad_fn(params, batch, *loss_args, **loss_kw)
+        return loss, aux, grads
+
+    def reshape(x):
+        return x.reshape((num_microbatches, x.shape[0] // num_microbatches)
+                         + x.shape[1:])
+
+    micro = jax.tree_util.tree_map(reshape, batch)
+
+    def body(carry, mb):
+        loss_acc, aux_acc, g_acc = carry
+        (loss, aux), g = grad_fn(params, mb, *loss_args, **loss_kw)
+        g = jax.tree_util.tree_map(lambda a, b: a + b.astype(jnp.float32),
+                                   g_acc, g)
+        aux = jax.tree_util.tree_map(lambda a, b: a + b, aux_acc, aux)
+        return (loss_acc + loss, aux, g), None
+
+    zero_g = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # aux prototype: evaluate shape via eval_shape (no FLOPs)
+    aux_shape = jax.eval_shape(
+        lambda p, b: loss_fn(p, b, *loss_args, **loss_kw)[1], params,
+        jax.tree_util.tree_map(lambda x: x[0], micro))
+    zero_aux = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), aux_shape)
+
+    (loss_sum, aux_sum, g_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zero_aux, zero_g), micro)
+    inv = 1.0 / num_microbatches
+    scale = lambda t: jax.tree_util.tree_map(lambda x: x * inv, t)
+    return loss_sum * inv, scale(aux_sum), scale(g_sum)
+
+
+# ----------------------------------------------------------------------
+# remat policies
+# ----------------------------------------------------------------------
+REMAT_POLICIES = {
+    "none": None,
+    "full": "nothing_saveable",           # recompute everything
+    "dots": "checkpoint_dots",            # save matmul outputs
+    "dots_no_batch": "checkpoint_dots_with_no_batch_dims",
+}
+
+
+def maybe_remat(fn: Callable, policy: Optional[str]) -> Callable:
+    if policy in (None, "none"):
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if policy == "dots_no_batch":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+# ----------------------------------------------------------------------
+# misc
+# ----------------------------------------------------------------------
+def count_params(params: PyTree) -> int:
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_bytes(params: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

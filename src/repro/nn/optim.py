@@ -1,0 +1,151 @@
+"""Optimizers and schedules (optax is not installed; built from scratch).
+
+API mirrors optax: an optimizer is a pair (init_fn, update_fn) packaged in
+`Optimizer`; update_fn(grads, state, params) -> (updates, state). Updates
+are ADDED to params (sign convention: updates already contain -lr).
+
+Includes: AdamW (paper uses Adam lr=1e-2), SGD+momentum, global-norm
+clipping, warmup+cosine/linear schedules, and hooks used by the
+distribution layer (gradient compression is applied before update_fn; see
+repro.dist.compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+# ----------------------------------------------------------------------
+# schedules
+# ----------------------------------------------------------------------
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int, end_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (end_frac + (1 - end_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_linear_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, peak_lr * (1.0 - t))
+    return fn
+
+
+# ----------------------------------------------------------------------
+# optimizer core
+# ----------------------------------------------------------------------
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], Any]
+    update: Callable[[PyTree, Any, PyTree], Tuple[PyTree, Any]]
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.asarray(0.0)
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def adamw(learning_rate: Schedule | float, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = None,
+          mu_dtype: jnp.dtype = jnp.float32) -> Optimizer:
+    sched = (learning_rate if callable(learning_rate)
+             else constant_schedule(learning_rate))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=mu_dtype)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree_util.tree_map(zeros, params),
+                         nu=jax.tree_util.tree_map(zeros, params))
+
+    def update(grads, state, params):
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    state.mu, grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    state.nu, grads)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, params, mu, nu)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(learning_rate: Schedule | float, momentum: float = 0.0,
+        clip_norm: Optional[float] = None) -> Optimizer:
+    sched = (learning_rate if callable(learning_rate)
+             else constant_schedule(learning_rate))
+
+    def init(params):
+        if momentum:
+            return (jnp.zeros((), jnp.int32),
+                    jax.tree_util.tree_map(jnp.zeros_like, params))
+        return (jnp.zeros((), jnp.int32), None)
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step, vel = state
+        step = step + 1
+        lr = sched(step)
+        if momentum:
+            vel = jax.tree_util.tree_map(lambda v, g: momentum * v + g, vel, grads)
+            updates = jax.tree_util.tree_map(lambda v: -lr * v, vel)
+        else:
+            updates = jax.tree_util.tree_map(lambda g: -lr * g, grads)
+        return updates, (step, vel)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)

@@ -1,0 +1,3 @@
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.resilience import (PreemptionHandler, StragglerDetector,
+                                      HeartbeatMonitor, ElasticPlan)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests see the normal 1-device CPU backend; the 512-device dry-run runs
+# ONLY via `python -m repro.launch.dryrun` (its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

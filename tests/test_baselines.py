@@ -1,0 +1,56 @@
+"""Baseline trainers (paper comparison set) — one-epoch smoke + the
+exactness/convergence properties each relies on."""
+import numpy as np
+import pytest
+
+from repro.core import (GCNConfig, expansion_stats, train_expansion_sgd,
+                        train_full_batch, train_sage, train_vrgcn)
+from repro.graph import make_dataset
+from repro.nn import adamw
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = make_dataset("cora", scale=0.4, seed=0)
+    cfg = GCNConfig(in_dim=g.features.shape[1], hidden_dim=24,
+                    out_dim=int(g.labels.max()) + 1, num_layers=2,
+                    dropout=0.1)
+    return g, cfg
+
+
+def test_full_batch_converges(setup):
+    g, cfg = setup
+    r = train_full_batch(g, cfg, adamw(1e-2), 15, eval_every=15)
+    assert r["history"][-1]["val_score"] > 0.5
+    losses = [h["loss"] for h in r["history"]]
+    assert losses[-1] < losses[0]
+
+
+def test_expansion_sgd_trains(setup):
+    g, cfg = setup
+    r = train_expansion_sgd(g, cfg, adamw(1e-2), 1, batch_size=128,
+                            node_cap=1024, eval_every=1)
+    assert np.isfinite(r["history"][-1]["loss"])
+
+
+def test_expansion_factor_grows_with_depth(setup):
+    g, _ = setup
+    e2 = expansion_stats(g, 64, 2, trials=3)["mean_expanded"]
+    e1 = expansion_stats(g, 64, 1, trials=3)["mean_expanded"]
+    assert e2 > e1
+
+
+def test_sage_trains(setup):
+    g, cfg = setup
+    r = train_sage(g, cfg, adamw(1e-2), 1, batch_size=128,
+                   fanouts=[5, 5], eval_every=1)
+    assert np.isfinite(r["history"][-1]["loss"])
+
+
+def test_vrgcn_trains_and_reports_history_bytes(setup):
+    g, cfg = setup
+    r = train_vrgcn(g, cfg, adamw(1e-2), 2, batch_size=128, eval_every=2)
+    assert np.isfinite(r["history"][-1]["loss"])
+    # the O(N·F·L) history the paper criticizes
+    expect = g.num_nodes * cfg.hidden_dim * (cfg.num_layers - 1) * 4
+    assert r["history_bytes"] == expect

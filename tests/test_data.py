@@ -1,0 +1,68 @@
+"""Data pipeline: determinism, restart stability, prefetch, clustered
+batching (the paper's idea transferred to LM data)."""
+import numpy as np
+
+from repro.data.clustered_batching import ClusteredBatcher, ngram_features
+from repro.data.tokens import Prefetcher, TokenPipeline
+
+
+def test_pipeline_deterministic_across_instances():
+    a = TokenPipeline(1000, 4, 32, seed=7).batch_at(5)
+    b = TokenPipeline(1000, 4, 32, seed=7).batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = TokenPipeline(1000, 4, 32, seed=8).batch_at(5)
+    assert (a["tokens"] != c["tokens"]).any()
+
+
+def test_pipeline_restart_stable_across_shard_counts():
+    """Elastic reshard: same (seed, step, shard) -> same data regardless
+    of when the job restarted."""
+    p1 = TokenPipeline(500, 2, 16, seed=1, shard_id=3, num_shards=8)
+    before = p1.batch_at(11)
+    p2 = TokenPipeline(500, 2, 16, seed=1, shard_id=3, num_shards=8)
+    for _ in range(5):  # consume some batches first — must not matter
+        next(iter(p2))
+    np.testing.assert_array_equal(before["tokens"], p2.batch_at(11)["tokens"])
+
+
+def test_markov_structure_learnable():
+    """Bigram predictability far above chance (the corpus has structure)."""
+    p = TokenPipeline(256, 8, 256, seed=0)
+    toks = p.batch_at(0)["tokens"]
+    # for each state, successors concentrate on <= 8 values
+    from collections import defaultdict
+    succ = defaultdict(set)
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            succ[int(a) % 512].add(int(b))
+    sizes = [len(v) for v in succ.values() if len(v) > 0]
+    assert np.mean(sizes) < 32   # vs 256 for iid
+
+
+def test_prefetcher_preserves_order():
+    it = iter([{"i": np.asarray(i)} for i in range(10)])
+    out = [int(x["i"]) for x in Prefetcher(it, depth=3)]
+    assert out == list(range(10))
+
+
+def test_clustered_batcher_improves_vocab_locality():
+    rng = np.random.default_rng(0)
+    # docs drawn from 4 topics with disjoint-ish vocab ranges
+    docs = []
+    for t in range(4):
+        for _ in range(40):
+            docs.append(rng.integers(t * 100, t * 100 + 120, size=64))
+    cb = ClusteredBatcher(docs, num_clusters=8, clusters_per_batch=2,
+                          batch_docs=16, seed=0)
+    clustered = [cb.within_batch_vocab_locality(b) for b in cb.epoch(0)]
+    rand_ids = [rng.choice(len(docs), 16, replace=False) for _ in range(6)]
+    random_loc = [cb.within_batch_vocab_locality(b) for b in rand_ids]
+    assert np.mean(clustered) > 1.3 * np.mean(random_loc), \
+        (np.mean(clustered), np.mean(random_loc))
+
+
+def test_ngram_features_normalized():
+    docs = [np.arange(50), np.ones(30, np.int64)]
+    f = ngram_features(docs, dim=64)
+    assert f.shape == (2, 64)
+    assert np.all(np.linalg.norm(f, axis=1) < 1.0 + 1e-5)

@@ -1,0 +1,110 @@
+"""CSR graph ops, normalization variants, cluster batching invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ClusterBatcher, label_entropy_per_cluster
+from repro.graph import (CSRGraph, make_dataset, metis_like_partition,
+                         normalize_csr, normalize_dense, random_partition)
+
+
+def _rand_graph(n=50, p=0.1, seed=0):
+    rng = np.random.default_rng(seed)
+    src, dst = np.where(rng.random((n, n)) < p)
+    return CSRGraph.from_edges(n, src, dst,
+                               features=rng.normal(size=(n, 4)).astype(np.float32),
+                               labels=rng.integers(0, 3, n).astype(np.int32),
+                               train_mask=np.ones(n, bool))
+
+
+def test_subgraph_matches_scipy():
+    g = _rand_graph(60, 0.15, 0)
+    nodes = np.array([3, 7, 11, 20, 21, 40, 55])
+    sub, relabel = g.subgraph(nodes)
+    a = g.to_scipy().toarray()
+    expect = a[np.ix_(nodes, nodes)]
+    got = sub.to_scipy().toarray()
+    np.testing.assert_allclose(got, expect)
+    assert (relabel[nodes] == np.arange(len(nodes))).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(5, 80), st.integers(0, 500))
+def test_normalize_dense_row_stochastic(n, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < 0.2).astype(np.float32)
+    np.fill_diagonal(a, 0)
+    a = np.maximum(a, a.T)
+    out = normalize_dense(a, "eq10")
+    np.testing.assert_allclose(out.sum(1), np.ones(n), rtol=1e-5)
+    # eq1: rows with degree > 0 sum to 1
+    out1 = normalize_dense(a, "eq1")
+    deg = a.sum(1)
+    np.testing.assert_allclose(out1.sum(1)[deg > 0], 1.0, rtol=1e-5)
+
+
+def test_normalize_eq11_diag_enhancement():
+    a = np.array([[0, 1, 1], [1, 0, 0], [1, 0, 0]], np.float32)
+    base = normalize_dense(a, "eq10")
+    enh = normalize_dense(a, "eq11", diag_lambda=1.0)
+    np.testing.assert_allclose(np.diag(enh), 2 * np.diag(base), rtol=1e-6)
+    off = ~np.eye(3, dtype=bool)
+    np.testing.assert_allclose(enh[off], base[off], rtol=1e-6)
+
+
+def test_normalize_csr_matches_dense():
+    g = _rand_graph(40, 0.2, 3)
+    dense = g.to_scipy().toarray()
+    for method in ("eq1", "sym", "eq10", "eq9", "eq11"):
+        ip, ix, dt = normalize_csr(g.indptr, g.indices, g.data, method,
+                                   diag_lambda=0.5)
+        import scipy.sparse as sp
+        got = sp.csr_matrix((dt, ix, ip), shape=dense.shape).toarray()
+        want = normalize_dense(dense, method, diag_lambda=0.5)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_cluster_batcher_epoch_covers_all_clusters():
+    g = make_dataset("cora", scale=0.3, seed=0)
+    parts = metis_like_partition(g, 8, seed=0)
+    b = ClusterBatcher(g, parts, clusters_per_batch=2, seed=0)
+    seen = 0
+    for batch in b.epoch(0):
+        assert batch.adj.shape == (b.node_cap, b.node_cap)
+        assert batch.features.shape[0] == b.node_cap
+        n = int(batch.num_real)
+        # padding must be zero
+        assert batch.adj[n:].sum() == 0 and batch.adj[:, n:].sum() == 0
+        assert not batch.node_mask[n:].any()
+        # batch adjacency rows are eq10-normalized (sum 1)
+        np.testing.assert_allclose(batch.adj[:n].sum(1), 1.0, rtol=1e-4)
+        seen += n
+    assert seen == g.num_nodes - (g.num_nodes and 0)  # all nodes covered
+    assert b.steps_per_epoch() == 4
+
+
+def test_cluster_batches_readd_between_cluster_links():
+    """§3.2: links between the q chosen clusters are included."""
+    g = make_dataset("cora", scale=0.3, seed=0)
+    parts = random_partition(g.num_nodes, 4, 0)
+    b = ClusterBatcher(g, parts, clusters_per_batch=2, seed=0)
+    batch = b.batch_from_clusters([0, 1])
+    nodes = np.concatenate([np.where(parts == 0)[0], np.where(parts == 1)[0]])
+    sub, _ = g.subgraph(nodes)
+    n = int(batch.num_real)
+    # nonzero pattern of the batch == induced subgraph (incl. cross links)
+    got = (batch.adj[:n, :n] > 0)
+    want = sub.to_scipy().toarray() > 0
+    np.fill_diagonal(got, False)   # normalization adds self loops
+    np.fill_diagonal(want, False)
+    assert (got == want).all()
+
+
+def test_label_entropy_cluster_vs_random():
+    """Paper Fig. 2: cluster partitions have skewed label distributions."""
+    g = make_dataset("cora", scale=1.0, seed=0)
+    pc = metis_like_partition(g, 10, seed=0)
+    pr = random_partition(g.num_nodes, 10, 0)
+    ec = label_entropy_per_cluster(g, pc).mean()
+    er = label_entropy_per_cluster(g, pr).mean()
+    assert ec < er, (ec, er)

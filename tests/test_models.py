@@ -1,0 +1,133 @@
+"""Per-arch smoke tests (reduced configs, the assignment's requirement):
+one forward/train step on CPU asserting output shapes + no NaNs; plus
+prefill/decode consistency across every decodable arch and MoE oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch, make_inputs
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.layers import moe_apply, spec_moe, rmsnorm
+from repro.models.lm import (decode_step, lm_loss, prefill, spec_caches,
+                             spec_params)
+from repro.models.spec import init_tree
+from repro.nn.optim import adamw, apply_updates
+
+SMOKE_SHAPE = ShapeConfig("smoke", "train", 32, 2)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_forward_and_step(name):
+    cfg = get_arch(name, smoke=True)
+    params = init_tree(spec_params(cfg), jax.random.PRNGKey(0))
+    batch = make_inputs(cfg, SMOKE_SHAPE)
+
+    @jax.jit
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda pp: lm_loss(pp, cfg, b, loss_chunk=16), has_aux=True)(p)
+        return loss, metrics, grads
+
+    loss, metrics, grads = step(params, batch)
+    assert np.isfinite(float(loss)), name
+    assert float(metrics["tokens"]) > 0
+    gmax = max(float(jnp.abs(g).max())
+               for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gmax) and gmax > 0, name
+    # one optimizer step keeps things finite
+    opt = adamw(1e-3)
+    st = opt.init(params)
+    upd, st = opt.update(grads, st, params)
+    params2 = apply_updates(params, upd)
+    loss2, _, _ = step(params2, batch)
+    assert np.isfinite(float(loss2)), name
+
+
+@pytest.mark.parametrize("name", [n for n in ARCH_NAMES
+                                  if not get_arch(n, True).is_encoder])
+def test_prefill_decode_consistency(name):
+    cfg = get_arch(name, smoke=True)
+    B, S = 2, 20
+    params = init_tree(spec_params(cfg), jax.random.PRNGKey(0))
+    max_seq = S + cfg.num_prefix_embeddings + 4
+    caches0 = init_tree(spec_caches(cfg, B, max_seq), jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                              cfg.vocab_size)
+
+    def mkbatch(t):
+        if cfg.num_prefix_embeddings:
+            pfx = jax.random.normal(jax.random.PRNGKey(3), (
+                B, cfg.num_prefix_embeddings, cfg.d_model))
+            return {"prefix_embeddings": pfx, "tokens": t}
+        return {"tokens": t}
+
+    logits_full, _ = prefill(params, cfg, mkbatch(toks), caches0)
+    _, caches = prefill(params, cfg, mkbatch(toks[:, :S - 1]), caches0)
+    pos = jnp.asarray(S - 1 + cfg.num_prefix_embeddings, jnp.int32)
+    logits_dec, _ = decode_step(params, cfg, toks[:, S - 1:S], caches, pos)
+    rel = float(jnp.abs(logits_full - logits_dec).max()) \
+        / float(jnp.abs(logits_full).max())
+    assert rel < 1e-2, (name, rel)
+
+
+def test_moe_matches_per_token_oracle():
+    """Dropless small-batch dispatch == direct per-token computation."""
+    cfg = get_arch("dbrx-132b", smoke=True)
+    params = init_tree(spec_moe(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, cfg.d_model))
+    y, aux = moe_apply(params, cfg, x)
+
+    h = rmsnorm(params["norm"], x, cfg.norm_eps).reshape(-1, cfg.d_model)
+    logits = h @ params["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    topv, topi = jax.lax.top_k(probs, cfg.experts_per_token)
+    topv = topv / topv.sum(-1, keepdims=True)
+    want = np.zeros((h.shape[0], cfg.d_model), np.float32)
+    for t in range(h.shape[0]):
+        for j in range(cfg.experts_per_token):
+            e = int(topi[t, j])
+            g = jax.nn.silu(h[t] @ params["wg"][e])
+            u = h[t] @ params["wu"][e]
+            want[t] += float(topv[t, j]) * np.asarray((g * u) @ params["wd"][e])
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, cfg.d_model), want,
+                               atol=2e-3)
+    assert 0.5 < float(aux) < float(cfg.num_experts) * 2
+
+
+def test_moe_aux_encourages_balance():
+    cfg = get_arch("granite-moe-1b-a400m", smoke=True)
+    params = init_tree(spec_moe(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+    _, aux = moe_apply(params, cfg, x)
+    # perfectly balanced aux == 1.0; random router should be near 1
+    assert 0.8 < float(aux) < 2.0
+
+
+def test_sliding_window_restricts_attention():
+    """gemma3 local layers must not see beyond the window."""
+    cfg = get_arch("gemma3-1b", smoke=True)
+    params = init_tree(spec_params(cfg), jax.random.PRNGKey(0))
+    B, S = 1, 24
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    # perturb a token far outside every window — with window=8 and 26
+    # layers of receptive-field growth the final token CAN still be
+    # affected through global layers; instead check pure-local smoke cfg
+    cfg_local = ArchConfig(
+        name="local-only", family="dense", num_layers=2, d_model=32,
+        num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=128,
+        pattern=("local",), head_dim=16, sliding_window=4)
+    p2 = init_tree(spec_params(cfg_local), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 20), 0, 128)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % 128)
+    l1, _ = lm_loss(p2, cfg_local, {"tokens": toks}, loss_chunk=20)
+    # logits at last position must be identical when changing token 0
+    # (2 layers × window 4 → receptive field 8 < 19)
+    from repro.models.lm import encode  # reuse forward path via loss trick
+    def last_logit(t):
+        caches = init_tree(spec_caches(cfg_local, 1, 20),
+                           jax.random.PRNGKey(3))
+        logits, _ = prefill(p2, cfg_local, {"tokens": t}, caches)
+        return np.asarray(logits)
+    np.testing.assert_allclose(last_logit(toks), last_logit(toks2),
+                               atol=1e-5)

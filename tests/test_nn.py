@@ -1,0 +1,93 @@
+"""Optimizer / schedules / gradient accumulation / precision policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import (BF16_COMPUTE, accumulate_gradients, adamw,
+                      apply_updates, clip_by_global_norm, global_norm, sgd,
+                      warmup_cosine_schedule, warmup_linear_schedule)
+
+
+def test_adamw_matches_reference_numpy():
+    rng = np.random.default_rng(0)
+    w0 = rng.normal(size=(5,)).astype(np.float32)
+    g = rng.normal(size=(5,)).astype(np.float32)
+    lr, b1, b2, eps = 0.1, 0.9, 0.999, 1e-8
+    opt = adamw(lr, b1, b2, eps)
+    params = {"w": jnp.asarray(w0)}
+    st = opt.init(params)
+    m = np.zeros(5)
+    v = np.zeros(5)
+    w = w0.copy()
+    for t in range(1, 6):
+        upd, st = opt.update({"w": jnp.asarray(g)}, st, params)
+        params = apply_updates(params, upd)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh, vh = m / (1 - b1 ** t), v / (1 - b2 ** t)
+        w = w - lr * mh / (np.sqrt(vh) + eps)
+        np.testing.assert_allclose(np.asarray(params["w"]), w, atol=1e-5)
+
+
+def test_weight_decay_decoupled():
+    opt = adamw(0.1, weight_decay=0.5)
+    params = {"w": jnp.ones(3)}
+    st = opt.init(params)
+    upd, _ = opt.update({"w": jnp.zeros(3)}, st, params)
+    np.testing.assert_allclose(np.asarray(upd["w"]), -0.1 * 0.5 * np.ones(3),
+                               atol=1e-6)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones(4) * 3.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 6.0) < 1e-5
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_schedules():
+    s = warmup_cosine_schedule(1.0, 10, 100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) < float(s(50)) < float(s(10))
+    lin = warmup_linear_schedule(1.0, 10, 110)
+    assert abs(float(lin(60)) - 0.5) < 1e-6
+
+
+@pytest.mark.parametrize("m", [1, 2, 4, 8])
+def test_accumulation_matches_full_batch(m):
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(6, 3)).astype(np.float32))}
+    batch = jnp.asarray(rng.normal(size=(8, 6)).astype(np.float32))
+
+    def loss_fn(p, b):
+        out = b @ p["w"]
+        l = jnp.mean(out ** 2)
+        return l, {"l": l}
+
+    loss_full, _, g_full = accumulate_gradients(loss_fn, params, batch, 1)
+    loss_m, _, g_m = accumulate_gradients(loss_fn, params, batch, m)
+    np.testing.assert_allclose(float(loss_m), float(loss_full), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_m["w"]), np.asarray(g_full["w"]),
+                               atol=1e-5)
+
+
+def test_precision_policy():
+    tree = {"w": jnp.ones(3, jnp.float32), "i": jnp.ones(3, jnp.int32)}
+    ct = BF16_COMPUTE.cast_to_compute(tree)
+    assert ct["w"].dtype == jnp.bfloat16
+    assert ct["i"].dtype == jnp.int32
+    back = BF16_COMPUTE.cast_to_param(ct)
+    assert back["w"].dtype == jnp.float32
+
+
+def test_sgd_momentum():
+    opt = sgd(0.1, momentum=0.9)
+    params = {"w": jnp.zeros(2)}
+    st = opt.init(params)
+    g = {"w": jnp.ones(2)}
+    upd1, st = opt.update(g, st, params)
+    upd2, st = opt.update(g, st, params)
+    np.testing.assert_allclose(np.asarray(upd1["w"]), -0.1)
+    np.testing.assert_allclose(np.asarray(upd2["w"]), -0.19, atol=1e-6)

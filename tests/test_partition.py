@@ -1,0 +1,67 @@
+"""Partitioner invariants (hypothesis) + quality vs random baseline."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (SBMSpec, edge_cut, make_dataset,
+                         metis_like_partition, partition_graph,
+                         random_partition, stochastic_block_model,
+                         within_cut_fraction)
+
+
+@st.composite
+def graph_and_parts(draw):
+    n = draw(st.integers(16, 400))
+    k = draw(st.integers(2, 8))
+    seed = draw(st.integers(0, 10_000))
+    g = stochastic_block_model(SBMSpec(
+        num_nodes=n, num_communities=max(2, n // 40), num_classes=4,
+        feature_dim=8, avg_within_degree=6.0, avg_between_degree=1.0,
+        seed=seed))
+    return g, k, seed
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_and_parts())
+def test_partition_invariants(gkp):
+    g, k, seed = gkp
+    parts = metis_like_partition(g, k, seed=seed)
+    # every node assigned exactly once, ids in range
+    assert parts.shape == (g.num_nodes,)
+    assert parts.min() >= 0 and parts.max() < k
+    # deterministic given the seed
+    parts2 = metis_like_partition(g, k, seed=seed)
+    assert (parts == parts2).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_random_partition_balanced(seed):
+    parts = random_partition(1000, 10, seed)
+    sizes = np.bincount(parts, minlength=10)
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_cluster_beats_random_on_communities():
+    """Paper Table 2's premise: clustering keeps far more edges."""
+    g = make_dataset("cora", scale=1.0, seed=0)
+    pr = random_partition(g.num_nodes, 10, 0)
+    pc = metis_like_partition(g, 10, seed=0)
+    wf_r = within_cut_fraction(g, pr)
+    wf_c = within_cut_fraction(g, pc)
+    assert wf_c > 3 * wf_r, (wf_c, wf_r)
+
+
+def test_balance_constraint():
+    g = make_dataset("cora", scale=1.0, seed=0)
+    _, stats = partition_graph(g, 10, method="metis", seed=0, eps=0.15)
+    assert stats.imbalance < 1.30, stats   # eps=0.15 + slack
+    assert stats.min_part > 0
+
+
+def test_edge_cut_consistency():
+    g = make_dataset("cora", scale=0.5, seed=1)
+    parts = metis_like_partition(g, 4, seed=1)
+    cut = edge_cut(g, parts)
+    assert 0 <= cut <= g.num_edges
+    assert abs(within_cut_fraction(g, parts) - (1 - cut / g.num_edges)) < 1e-9

@@ -1,0 +1,97 @@
+"""Sharding policy invariants: spec trees, rules divisibility, pspec
+structure consistency — these guard the dry-run against silent drift
+between params, shapes, and shardings (the single-source-of-truth
+property of models/spec.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.dist.sharding import CellPolicy, make_rules
+from repro.models.config import SHAPES, ShapeConfig
+from repro.models.lm import spec_caches, spec_params
+from repro.models.spec import (TensorSpec, init_tree, pspec_tree,
+                               shape_tree, spec_params as count_params)
+
+
+def _mesh_stub():
+    """A Mesh-shaped object with the production axis sizes — make_rules
+    only reads .shape/.axis_names, so no devices are needed."""
+    class M:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    return M()
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_spec_and_pspec_trees_are_congruent(name):
+    cfg = get_arch(name)   # FULL config — no allocation happens
+    specs = spec_params(cfg)
+    mesh = _mesh_stub()
+    rules = make_rules(mesh, cfg, SHAPES["train_4k"], CellPolicy())
+    pspecs = pspec_tree(specs, rules)
+    shapes = shape_tree(specs)
+    s_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, TensorSpec))
+    p_leaves = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    h_leaves = jax.tree_util.tree_leaves(shapes)
+    assert len(s_leaves) == len(p_leaves) == len(h_leaves)
+    # every sharded dim must divide the mesh axis size
+    for s, p in zip(s_leaves, p_leaves):
+        for dim, axis in zip(s.shape, tuple(p) + (None,) * 8):
+            if axis is None:
+                continue
+            axes = (axis,) if isinstance(axis, str) else axis
+            k = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % k == 0, (name, s.shape, p)
+
+
+@pytest.mark.parametrize("name", ["gemma3-1b", "dbrx-132b", "xlstm-1.3b"])
+def test_cache_specs_shardable(name):
+    cfg = get_arch(name)
+    mesh = _mesh_stub()
+    shape = SHAPES["decode_32k"]
+    rules = make_rules(mesh, cfg, shape, CellPolicy())
+    caches = spec_caches(cfg, shape.global_batch, shape.seq_len)
+    pspecs = pspec_tree(caches, rules)
+    for s, p in zip(
+            jax.tree_util.tree_leaves(
+                caches, is_leaf=lambda x: isinstance(x, TensorSpec)),
+            jax.tree_util.tree_leaves(
+                pspecs, is_leaf=lambda x: isinstance(x, P))):
+        for dim, axis in zip(s.shape, tuple(p) + (None,) * 8):
+            if axis is None:
+                continue
+            axes = (axis,) if isinstance(axis, str) else axis
+            k = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % k == 0, (name, s.shape, p)
+
+
+def test_kv1_arch_gets_sequence_sharded_decode_cache():
+    """gemma3 (kv=1) cannot shard kv heads over model=16 — the rules
+    must fall back to sequence-sharded KV (flash-decoding)."""
+    cfg = get_arch("gemma3-1b")
+    rules = make_rules(_mesh_stub(), cfg, SHAPES["long_500k"], CellPolicy())
+    assert rules["kv_heads"] is None
+    assert rules["kv_seq"] == "model"
+
+
+def test_single_sequence_decode_keeps_batch_unsharded():
+    cfg = get_arch("xlstm-1.3b")
+    rules = make_rules(_mesh_stub(), cfg, SHAPES["long_500k"], CellPolicy())
+    assert rules["batch"] is None     # B=1 cannot shard over 16
+
+
+def test_full_param_counts_match_arch_class():
+    """Full configs land in the right parameter-count ballpark."""
+    expect = {"llama3.2-1b": (1.0e9, 2.0e9),
+              "dbrx-132b": (110e9, 150e9),
+              "internlm2-20b": (15e9, 25e9),
+              "gemma3-1b": (0.7e9, 1.6e9),
+              "granite-moe-1b-a400m": (0.8e9, 1.8e9)}
+    for name, (lo, hi) in expect.items():
+        n = count_params(spec_params(get_arch(name)))
+        assert lo < n < hi, (name, f"{n:,}")
