@@ -1,0 +1,28 @@
+"""Distributed training layer: sharding rules, gradient compression,
+and pjit/shard_map step builders.
+
+Three modules, one contract:
+  sharding     — CellPolicy + make_rules: logical-axis -> mesh-axis rules
+                 derived from the models/spec.py TensorSpec trees (the
+                 single source of truth), with divisibility guaranteed.
+  compression  — low-bit gradient all-reduce (int4/int8 symmetric
+                 quantization with error feedback, bf16 psum).
+  steps        — sharded train/prefill/decode/encode steps for the LM
+                 stack and a shard_map data-parallel step for the
+                 Cluster-GCN trainer (make_gcn_train_step).
+"""
+from repro.dist.sharding import (CellPolicy, batch_pspec, make_rules,
+                                 replicated, shardings_for)
+from repro.dist.compression import (bf16_psum_mean, compressed_psum_mean,
+                                    dequantize, quantize_symmetric)
+from repro.dist.steps import (make_decode_step, make_encode_step,
+                              make_gcn_train_step, make_prefill_step,
+                              make_train_step, spec_train_state)
+
+__all__ = [
+    "CellPolicy", "make_rules", "shardings_for", "batch_pspec", "replicated",
+    "quantize_symmetric", "dequantize", "bf16_psum_mean",
+    "compressed_psum_mean",
+    "spec_train_state", "make_train_step", "make_prefill_step",
+    "make_decode_step", "make_encode_step", "make_gcn_train_step",
+]

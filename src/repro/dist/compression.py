@@ -1,0 +1,71 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Symmetric per-tensor quantization (int4/int8 in an int8 container) with
+error feedback: each worker quantizes (grad + carried error), reduces the
+dequantized message, and carries the quantization residual into the next
+step. The residual telescopes, so the *accumulated* update is unbiased —
+the property test_compression.py::test_error_feedback_preserves_signal
+checks, and the one that makes 8-bit sync safe for Adam.
+
+`compressed_psum_mean` is written for use inside shard_map over the data
+axis (see repro.dist.steps.make_gcn_train_step and
+tests/test_distributed.py). The psum here reduces the *dequantized*
+message — on a real wire the int8 payload + one fp32 scale per tensor is
+what moves (4-8× less traffic than fp32 all-reduce); XLA's host backend
+has no int-allreduce-with-rescale primitive, so the wire format is
+simulated while the numerics are exact to the algorithm.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_symmetric(x: jnp.ndarray, bits: int = 8,
+                       eps: float = 1e-12) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric quantization to `bits` (4 or 8) in an int8
+    container. Returns (q, scale); max |x| maps exactly to the top code,
+    so round-trip error is bounded by scale/2."""
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    qmax = float(2 ** (bits - 1) - 1)            # 7 or 127
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / qmax, eps)
+    q = jnp.clip(jnp.rint(x / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def psum_mean(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Exact mean all-reduce (the uncompressed baseline the variants
+    below approximate). psum of a Python int folds to the static axis
+    size — one collective, not two."""
+    return jax.lax.psum(x, axis_name) / jax.lax.psum(1, axis_name)
+
+
+def bf16_psum_mean(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Mean all-reduce with bf16 wire format (2× traffic reduction).
+    Accumulation happens in f32 after the cast-down."""
+    y = psum_mean(x.astype(jnp.bfloat16).astype(jnp.float32), axis_name)
+    return y.astype(x.dtype)
+
+
+def compressed_psum_mean(local: jnp.ndarray, err: jnp.ndarray,
+                         axis_name: str, bits: int = 8
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Low-bit mean all-reduce with error feedback.
+
+    local : this worker's contribution (e.g. its gradient shard)
+    err   : carried quantization residual from the previous step
+    Returns (mean over the axis, new residual to carry)."""
+    x = local.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale = quantize_symmetric(x, bits=bits)
+    deq = dequantize(q, scale)
+    new_err = x - deq
+    mean = psum_mean(deq, axis_name)
+    return mean.astype(local.dtype), new_err

@@ -1,0 +1,136 @@
+"""Sharding rules: logical axis names -> mesh axes, per (arch × shape ×
+policy) cell.
+
+`make_rules` is the single decision point for how every tensor in the
+system shards. It never guesses from tensor names: it walks the
+TensorSpec trees from models/spec.py (params AND caches), collects every
+dimension size each logical axis labels, and only assigns a mesh axis
+when EVERY such dimension divides the mesh-axis size. Anything that
+doesn't fit falls back to replicated — so pspec_tree(specs, rules) is
+divisibility-safe by construction for every arch in configs.ARCH_NAMES.
+
+Only reads `mesh.shape` / `mesh.axis_names`, so tests can pass a stub
+mesh with no devices behind it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, data_axes
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.lm import spec_caches, spec_params
+from repro.models.spec import TensorSpec, pspec_tree
+
+ShardingRules = Dict[str, Any]   # logical axis -> mesh axis | tuple | None
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPolicy:
+    """Per-cell parallelism knobs (the dry-run hillclimb surface)."""
+    fsdp: bool = False          # shard 'embed' (and MoE expert state) over data
+    microbatches: int = 1       # gradient-accumulation splits of the batch
+    remat: bool = True          # checkpoint each scanned layer group
+    loss_chunk: int = 512       # chunked-CE chunk length
+
+
+def _data_spec(mesh):
+    """data_axes as a PartitionSpec entry: a bare string for the common
+    single-axis case, a tuple for multipod, None when absent."""
+    axes = data_axes(mesh)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _collect_dims(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, set]:
+    """Every dimension size each logical axis labels, across the param
+    tree and the (batch, seq_len)-sized cache tree."""
+    dims: Dict[str, set] = {}
+    trees = [spec_params(cfg),
+             spec_caches(cfg, shape.global_batch, shape.seq_len)]
+    for tree in trees:
+        for s in jax.tree_util.tree_leaves(
+                tree, is_leaf=lambda x: isinstance(x, TensorSpec)):
+            for d, a in zip(s.shape, s.axes):
+                if a is not None:
+                    dims.setdefault(a, set()).add(int(d))
+    dims.setdefault("batch", set()).add(int(shape.global_batch))
+    return dims
+
+
+def make_rules(mesh, cfg: ArchConfig, shape: ShapeConfig,
+               policy: CellPolicy) -> ShardingRules:
+    """Axis rules for one (arch × shape × policy) cell.
+
+    Layout: tensor-ish axes (heads/kv/ffn/experts/vocab + the SSM/LSTM
+    inner dims) over 'model'; 'embed' FSDP-shards over the data axes when
+    policy.fsdp; 'batch' over the data axes. KV caches shard over
+    kv-heads when the head count divides 'model', else fall back to
+    sequence-sharded KV (flash-decoding style) — e.g. gemma3's kv=1.
+    """
+    dims = _collect_dims(cfg, shape)
+    data = _data_spec(mesh)
+    model = "model" if "model" in tuple(mesh.axis_names) else None
+
+    def fit(axis: str, want) -> Optional[Any]:
+        """`want` iff every dim labeled `axis` divides the mesh axes."""
+        if want is None:
+            return None
+        k = axis_size(mesh, want)
+        sizes = dims.get(axis)
+        if not sizes or any(d % k for d in sizes):
+            return None
+        return want
+
+    rules: ShardingRules = {
+        "embed": fit("embed", data) if policy.fsdp else None,
+        "embed2": fit("embed2", model),
+        "heads": fit("heads", model),
+        "kv": fit("kv", model),
+        "ffn": fit("ffn", model),
+        "experts": fit("experts", model),
+        # expert FFN width stays unsharded: 'experts' already takes
+        # 'model' and double-sharding one weight over one axis is illegal
+        "moe_ffn": None,
+        "vocab": fit("vocab", model),
+        "layers": None,            # scan axis — never sharded
+        "batch": fit("batch", data),
+        "ssm_in": fit("ssm_in", model),
+        "ssm_heads": fit("ssm_heads", model),
+        "lstm_in": fit("lstm_in", model),
+        "lstm_in2": fit("lstm_in2", model),
+        "lstm_heads": fit("lstm_heads", model),
+    }
+    # KV cache: prefer head sharding; kv=1-style archs (or head counts
+    # not divisible by 'model') get sequence-sharded KV instead.
+    kv_heads = fit("kv_heads", model)
+    rules["kv_heads"] = kv_heads
+    rules["kv_seq"] = None if kv_heads is not None else fit("kv_seq", model)
+    return rules
+
+
+def shardings_for(tree, mesh, rules: ShardingRules):
+    """NamedShardings for a TensorSpec tree (device_put / jit shardings)."""
+    pspecs = pspec_tree(tree, rules)
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(bspecs, mesh, rules: ShardingRules):
+    """Shardings for the model-input batch dict: batch-dim sharded per
+    rules['batch'], everything else replicated."""
+    b = rules.get("batch")
+
+    def one(s):
+        return NamedSharding(
+            mesh, P(*((b,) + (None,) * (len(s.shape) - 1))))
+    return jax.tree_util.tree_map(one, bspecs)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

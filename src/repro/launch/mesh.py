@@ -20,6 +20,15 @@ HBM_BW = 819e9                  # B/s
 ICI_BW = 50e9                   # B/s per link (~4 links usable per chip)
 
 
+def use_mesh(mesh):
+    """Mesh context manager across jax versions: jax.set_mesh where it
+    exists (>= 0.5), else the Mesh object's own context manager (which
+    pjit-era jax uses to resolve PartitionSpec constraints)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -17,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_arch
 from repro.dist.sharding import CellPolicy, make_rules, shardings_for
 from repro.dist.steps import make_decode_step, make_prefill_step
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.models.config import ShapeConfig
 from repro.models.lm import spec_caches, spec_params
 from repro.models.spec import init_tree
@@ -49,7 +49,7 @@ def main():
     rules = make_rules(mesh, cfg, shape, policy)
     act_spec = P(rules.get("batch"), None, None)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         p_specs = spec_params(cfg)
         c_specs = spec_caches(cfg, args.batch, max_seq)
         p_sh = shardings_for(p_specs, mesh, rules)

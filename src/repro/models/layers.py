@@ -271,14 +271,22 @@ def moe_capacity(cfg: ArchConfig, tokens: int) -> int:
     return max(8, -(-c // 8) * 8)
 
 
-def _ambient_axes():
-    """Mesh axes from the ambient jax.set_mesh context (None, None when
-    tracing without a mesh — plain CPU tests)."""
+def ambient_axes():
+    """Mesh (data, model) axes from the ambient mesh context — jax.set_mesh
+    on new jax, the pjit-era `with mesh:` resource env on 0.4.x. (None,
+    None) when tracing without a mesh — plain CPU tests. Also used by
+    repro.dist.steps to decide whether activation constraints apply."""
+    names = ()
     try:
         m = jax.sharding.get_abstract_mesh()
         names = tuple(m.axis_names) if m is not None else ()
     except Exception:
-        names = ()
+        try:
+            from jax._src.mesh import thread_resources
+            pm = thread_resources.env.physical_mesh
+            names = tuple(pm.axis_names) if not pm.empty else ()
+        except Exception:
+            names = ()
     data = tuple(a for a in ("pod", "data") if a in names) or None
     model = "model" if "model" in names else None
     return data, model
@@ -290,7 +298,7 @@ def _moe_constrain(x, spec_axes):
     (model=experts, data=capacity) — otherwise SPMD either partial-sums
     the expert einsums (when weights are FSDP-sharded) or replicates the
     whole global dispatch per data shard (when they are not)."""
-    data, model = _ambient_axes()
+    data, model = ambient_axes()
     if data is None and model is None:
         return x
     from jax.sharding import PartitionSpec as P

@@ -38,9 +38,14 @@ def is_spec(x) -> bool:
     return isinstance(x, TensorSpec)
 
 
-def _map_specs(fn: Callable[[TensorSpec], Any], tree):
+def map_specs(fn: Callable[[TensorSpec], Any], tree):
+    """tree_map over TensorSpec leaves (public: the dist layer derives
+    optimizer-state and sharding trees from param spec trees with it)."""
     return jax.tree_util.tree_map(fn, tree,
                                   is_leaf=lambda x: isinstance(x, TensorSpec))
+
+
+_map_specs = map_specs
 
 
 def shape_tree(tree):

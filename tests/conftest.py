@@ -1,8 +1,32 @@
 import os
+import subprocess
 import sys
+
+import pytest
 
 # tests see the normal 1-device CPU backend; the 512-device dry-run runs
 # ONLY via `python -m repro.launch.dryrun` (its own process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# src/ goes on sys.path here, so the tier-1 invocation is simply
+#   python -m pytest -x -q
+# (an explicit PYTHONPATH=src also works and is what subprocess tests use).
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, _SRC)
+
+
+@pytest.fixture
+def run_distributed():
+    """Run `code` in a subprocess with a forced multi-device CPU host.
+    Multi-device tests MUST be their own process: XLA_FLAGS has to be
+    set before jax initializes."""
+    def run(code: str, devices: int = 8) -> str:
+        env = dict(
+            os.environ,
+            XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+            PYTHONPATH=_SRC, JAX_PLATFORMS="cpu")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=560)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return out.stdout
+    return run

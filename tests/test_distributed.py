@@ -1,36 +1,21 @@
 """Distributed integration tests (subprocess — they need a multi-device
-host platform, which must be configured before jax initializes)."""
+host platform; see the run_distributed fixture in conftest.py)."""
 import json
-import subprocess
-import sys
-import os
-import pathlib
 
 import pytest
 
-SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
-
-
-def _run(code: str, devices: int = 8) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
-
 
 @pytest.mark.slow
-def test_sharded_train_step_matches_single_device():
+def test_sharded_train_step_matches_single_device(run_distributed):
     """FSDP×TP pjit step must produce the same loss as 1-device."""
-    out = _run("""
+    out = run_distributed("""
 import jax, jax.numpy as jnp, json
 from jax.sharding import PartitionSpec as P
 from repro.configs import get_arch, make_inputs, input_specs
 from repro.models.config import ShapeConfig
 from repro.dist.sharding import CellPolicy, make_rules, shardings_for, batch_pspec
 from repro.dist.steps import make_train_step, spec_train_state
+from repro.launch.mesh import use_mesh
 from repro.models.spec import init_tree
 from repro.nn.optim import adamw
 
@@ -45,7 +30,7 @@ for mesh_shape in [(1, 1), (4, 2)]:
     act = P(rules.get("batch"), None, None)
     st_specs = spec_train_state(cfg)
     st_sh = shardings_for(st_specs, mesh, rules)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step = jax.jit(make_train_step(cfg, policy, adamw(1e-3), act_spec=act),
                        in_shardings=(st_sh, batch_pspec(input_specs(cfg, shape), mesh, rules)),
                        out_shardings=(st_sh, None))
@@ -64,8 +49,8 @@ print(json.dumps(losses))
 
 
 @pytest.mark.slow
-def test_elastic_checkpoint_restore_onto_smaller_mesh():
-    out = _run("""
+def test_elastic_checkpoint_restore_onto_smaller_mesh(run_distributed):
+    out = run_distributed("""
 import jax, jax.numpy as jnp, numpy as np, tempfile
 from repro.configs import get_arch
 from repro.dist.sharding import CellPolicy, make_rules, shardings_for
@@ -99,9 +84,9 @@ with tempfile.TemporaryDirectory() as d:
 
 
 @pytest.mark.slow
-def test_gradient_compression_allreduce():
+def test_gradient_compression_allreduce(run_distributed):
     """shard_map DP all-reduce with int8 compression + error feedback."""
-    out = _run("""
+    out = run_distributed("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.dist.compression import compressed_psum_mean
 from jax.sharding import PartitionSpec as P
