@@ -1,21 +1,26 @@
 """Paper Table 6 analogue: sparse-op backends for the Â'X hot loop.
 
 The paper benchmarked PyTorch-vs-TF sparse ops; ours compares the
-backends available to this framework: XLA dense matmul (what cluster
-batches use), scipy CSR (host baseline), segment-sum edge-list (full-
-graph JAX path), and the block-ELL Pallas kernel in interpret mode
-(correctness path; its TPU perf is estimated analytically from block
-fill rate since interpret mode measures Python, not the MXU)."""
+backends available to this framework: XLA dense matmul (what dense
+cluster batches use), scipy CSR (host baseline), the forward-only
+block-ELL product, and — new — the DIFFERENTIABLE block-ELL path
+(BlockEllAdj + custom VJP) timed forward AND forward+backward, which is
+what training with `sparse_adj=True` actually runs. The Pallas kernel's
+TPU perf is estimated analytically from block fill rate since interpret
+mode measures Python, not the MXU. Besides the CSV rows, the run emits
+machine-readable BENCH_spmm.json (benchmarks.common.write_bench_json)
+so CI tracks the perf trajectory."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, section, timed
+from benchmarks.common import csv_row, section, timed, write_bench_json
 from repro.core import ClusterBatcher
 from repro.graph import make_dataset, partition_graph
-from repro.kernels import block_ell_from_dense
+from repro.kernels import block_ell_adj_from_dense, block_ell_from_dense
+from repro.kernels.ops import spmm
 from repro.kernels.ref import spmm_block_ell_ref
 
 
@@ -26,6 +31,13 @@ def run(quick: bool = True):
     b = ClusterBatcher(g, parts, clusters_per_batch=2, seed=0)
     batch = b.batch_from_clusters([0, 1])
     n = b.node_cap
+    rows = []
+
+    def record(name, seconds, **meta):
+        rows.append(dict(name=name, seconds=seconds, **meta))
+        print(csv_row(name, seconds,
+                      " ".join(f"{k}={v}" for k, v in meta.items())))
+
     for F in (128, 512) if not quick else (128,):
         x = np.random.default_rng(0).normal(size=(n, F)).astype(np.float32)
         adj = batch.adj
@@ -44,20 +56,42 @@ def run(quick: bool = True):
         f_bell = jax.jit(lambda bb, cc, v: spmm_block_ell_ref(bb, cc, v))
         t_bell, _ = timed(lambda: np.asarray(f_bell(bj, cj, xd)))
 
+        # the differentiable training path: BlockEllAdj + custom VJP
+        # (backward = transposed-tile product, dense Â never built)
+        bell = block_ell_adj_from_dense(adj, 128)
+        f_fwd = jax.jit(spmm)
+        t_bell_fwd, _ = timed(lambda: np.asarray(f_fwd(bell, xd)))
+        # squared loss so the backward depends on x (a plain .sum() would
+        # let XLA constant-fold the whole fwd+bwd away)
+        f_fb = jax.jit(jax.grad(lambda v, a: (spmm(a, v) ** 2).sum()))
+        t_bell_fb, _ = timed(lambda: np.asarray(f_fb(xd, bell)))
+        f_dfb = jax.jit(jax.grad(lambda v, a: ((a @ v) ** 2).sum()))
+        t_dense_fb, _ = timed(lambda: np.asarray(f_dfb(xd, ad)))
+
         nnz = int((adj != 0).sum())
         fill = nnz / blocks[:, :, 0, 0].size / (128 * 128) \
             if blocks.size else 0
         dense_gflops = 2 * n * n * F / 1e9
         bell_gflops = 2 * blocks.shape[0] * blocks.shape[1] * 128 * 128 \
             * F / 1e9
-        print(csv_row(f"table6/F{F}/xla-dense", t_dense,
-                      f"GFLOP/s={dense_gflops / t_dense:.1f}"))
-        print(csv_row(f"table6/F{F}/scipy-csr", t_csr,
-                      f"nnz={nnz}"))
-        print(csv_row(f"table6/F{F}/block-ell(xla)", t_bell,
-                      f"flop_saving_vs_dense={dense_gflops / bell_gflops:.2f}x"
-                      f" block_fill={fill:.3f}"))
-    return None
+        record(f"table6/F{F}/xla-dense", t_dense,
+               gflops_per_s=round(dense_gflops / t_dense, 1))
+        record(f"table6/F{F}/scipy-csr", t_csr, nnz=nnz)
+        record(f"table6/F{F}/block-ell(xla)", t_bell,
+               flop_saving_vs_dense=round(dense_gflops / bell_gflops, 2),
+               block_fill=round(fill, 3))
+        record(f"table6/F{F}/block-ell-vjp-fwd", t_bell_fwd,
+               k_slots=int(blocks.shape[1]))
+        record(f"table6/F{F}/block-ell-vjp-fwdbwd", t_bell_fb,
+               bwd="transposed-tiles",
+               speedup_vs_dense=round(t_dense_fb / t_bell_fb, 2))
+        record(f"table6/F{F}/xla-dense-fwdbwd", t_dense_fb)
+
+    out = write_bench_json("spmm", dict(
+        bench="spmm", node_cap=n, quick=quick, backend=jax.default_backend(),
+        rows=rows))
+    print(f"# wrote {out}")
+    return rows
 
 
 if __name__ == "__main__":

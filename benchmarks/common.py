@@ -1,10 +1,21 @@
 """Shared helpers for the paper-table benchmarks."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Callable
 
 import numpy as np
+
+
+def write_bench_json(name: str, record: dict,
+                     path: str | None = None) -> pathlib.Path:
+    """Machine-readable benchmark output: BENCH_<name>.json in the CWD
+    (CI uploads it as an artifact so the perf trajectory is tracked)."""
+    p = pathlib.Path(path) if path else pathlib.Path(f"BENCH_{name}.json")
+    p.write_text(json.dumps(record, indent=1))
+    return p
 
 
 def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):

@@ -26,6 +26,9 @@ def main():
     ap.add_argument("--partitions", type=int, default=50)
     ap.add_argument("--clusters-per-batch", type=int, default=1)
     ap.add_argument("--diag-lambda", type=float, default=1.0)
+    ap.add_argument("--sparse", action="store_true",
+                    help="block-ELL Â batches + differentiable Pallas "
+                         "spmm instead of the dense XLA matmul")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
@@ -54,7 +57,7 @@ def main():
     with PreemptionHandler() as pre:
         result = train_cluster_gcn(g, batcher, cfg, adamw(1e-2),
                                    num_epochs=args.epochs, eval_every=5,
-                                   verbose=True)
+                                   verbose=True, sparse_adj=args.sparse)
         if ckpt:
             ckpt.save(steps, result.params, blocking=True)
     test_f1 = evaluate(result.params, g, cfg, g.test_mask, "eq11",

@@ -22,7 +22,7 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.graph.csr import CSRGraph
-from repro.graph.normalization import normalize_dense
+from repro.graph.normalization import normalize_csr, normalize_dense
 
 Array = np.ndarray
 
@@ -32,7 +32,11 @@ class ClusterBatch:
     """Fixed-shape, jit-stable batch. All arrays padded to node_cap.
 
     adj:        (cap, cap) float32 — normalized adjacency of the q-cluster
-                union subgraph (zero rows/cols in padding).
+                union subgraph (zero rows/cols in padding) — OR, with
+                `ClusterBatcher(sparse_adj=True)`, a kernels.BlockEllAdj
+                pytree (block-ELL tiles + host-built transpose) whose
+                leaves are equally fixed-shape, so stacking / jit / vmap /
+                shard_map treat it exactly like the dense block.
     features:   (cap, F) float32
     labels:     (cap,) int32 or (cap, C) float32
     node_mask:  (cap,) bool — real node?
@@ -66,6 +70,11 @@ class ClusterBatcher:
     diag_lambda: λ of Eq. 11.
     precompute_ax: paper §6.2 — first layer uses A'X precomputed per batch
       (exact 1-hop aggregation; saves one propagation in the model).
+    sparse_adj: emit BlockEllAdj batches (block-ELL tiles built straight
+      from the normalized batch CSR, never densified) instead of the
+      dense (cap, cap) block — the differentiable Pallas spmm path.
+    block_size: tile edge B of the block-ELL format (node_cap must be a
+      multiple of it; the default matches pad_multiple=128 / the MXU).
     """
     graph: CSRGraph
     parts: Array
@@ -76,6 +85,8 @@ class ClusterBatcher:
     pad_multiple: int = 128
     seed: int = 0
     drop_overflow: bool = True
+    sparse_adj: bool = False
+    block_size: int = 128
 
     def __post_init__(self):
         self.parts = np.asarray(self.parts)
@@ -91,6 +102,10 @@ class ClusterBatcher:
                                       self.pad_multiple)
         self._sizes = sizes
         self.overflow_count = 0
+        if self.sparse_adj and self.node_cap % self.block_size:
+            raise ValueError(
+                f"sparse_adj needs node_cap ({self.node_cap}) divisible by "
+                f"block_size ({self.block_size})")
 
     # ------------------------------------------------------------------
     def batch_from_clusters(self, cluster_ids: Sequence[int]) -> ClusterBatch:
@@ -105,14 +120,28 @@ class ClusterBatcher:
         b = len(nodes)
         cap = self.node_cap
 
-        dense = np.zeros((cap, cap), np.float32)
-        row = np.repeat(np.arange(b), np.diff(sub.indptr))
-        dense[row, sub.indices] = sub.data
-        # re-normalize the combined adjacency (paper §6.2)
-        dense[:b, :b] = normalize_dense(dense[:b, :b], self.norm,
-                                        self.diag_lambda)
-        dense[b:, :] = 0.0
-        dense[:, b:] = 0.0
+        if self.sparse_adj:
+            # normalize the batch CSR directly (paper §6.2) and tile it —
+            # the dense (cap, cap) block is never materialized. K is fixed
+            # at cap/B for shape stability across batches (lossless: a
+            # row-block can reference at most cap/B column-blocks).
+            from repro.kernels.ops import block_ell_adj_from_csr
+            ip, ix, dt = normalize_csr(sub.indptr, sub.indices, sub.data,
+                                       self.norm, self.diag_lambda)
+            k = cap // self.block_size
+            adj = block_ell_adj_from_csr(ip, ix, dt, n_cols=cap,
+                                         block=self.block_size, k_slots=k,
+                                         k_slots_t=k, n_rows=cap)
+        else:
+            dense = np.zeros((cap, cap), np.float32)
+            row = np.repeat(np.arange(b), np.diff(sub.indptr))
+            dense[row, sub.indices] = sub.data
+            # re-normalize the combined adjacency (paper §6.2)
+            dense[:b, :b] = normalize_dense(dense[:b, :b], self.norm,
+                                            self.diag_lambda)
+            dense[b:, :] = 0.0
+            dense[:, b:] = 0.0
+            adj = dense
 
         feat_dim = self.graph.features.shape[1]
         feats = np.zeros((cap, feat_dim), np.float32)
@@ -132,7 +161,7 @@ class ClusterBatcher:
             loss_mask[:b] = self.graph.train_mask[nodes].astype(np.float32)
         else:
             loss_mask[:b] = 1.0
-        return ClusterBatch(adj=dense, features=feats, labels=labels,
+        return ClusterBatch(adj=adj, features=feats, labels=labels,
                             node_mask=node_mask, loss_mask=loss_mask,
                             num_real=np.int32(b))
 

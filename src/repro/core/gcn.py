@@ -4,9 +4,10 @@ cluster-batch adjacency blocks.
 The per-batch compute is exactly the paper's: Z^{l+1} = Â (X^l W^l),
 X^{l+1} = σ(Z^{l+1}); Â is the re-normalized q-cluster union block built
 host-side by ClusterBatcher. The Â·H product is the kernel hot-spot — it
-dispatches through `spmm` so the Pallas block kernel (repro.kernels) can
-be swapped in on TPU; the default is jnp.matmul (XLA dense, also what the
-dry-run/roofline measures).
+dispatches through the adjacency-polymorphic `spmm` (repro.kernels.ops):
+a dense Â keeps the XLA matmul; a BlockEllAdj batch (ClusterBatcher
+sparse_adj=True) routes to the differentiable block-ELL Pallas product
+whose backward runs on the host-built transposed tiles.
 """
 from __future__ import annotations
 
@@ -17,6 +18,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import spmm as spmm_dispatch
 from repro.nn.core import glorot, zeros_init
 
 PyTree = Any
@@ -58,10 +60,10 @@ def _layernorm(x, scale):
     return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale
 
 
-def gcn_forward(params: PyTree, adj: jnp.ndarray, x: jnp.ndarray,
+def gcn_forward(params: PyTree, adj, x: jnp.ndarray,
                 cfg: GCNConfig, *, train: bool = False,
                 rng: Optional[jax.Array] = None,
-                spmm: Callable = jnp.matmul) -> jnp.ndarray:
+                spmm: Callable = spmm_dispatch) -> jnp.ndarray:
     """Returns final-layer logits Z^{(L)} (no activation on last layer)."""
     h = x
     for i, layer in enumerate(params["layers"]):
@@ -84,7 +86,7 @@ def gcn_forward(params: PyTree, adj: jnp.ndarray, x: jnp.ndarray,
 
 
 def gcn_loss(params: PyTree, batch_tuple, cfg: GCNConfig, *,
-             train: bool = True, rng=None, spmm: Callable = jnp.matmul):
+             train: bool = True, rng=None, spmm: Callable = spmm_dispatch):
     """(loss, aux) on a ClusterBatch.astuple(). aux carries micro-F1 parts."""
     adj, feats, labels, node_mask, loss_mask, num_real = batch_tuple
     if cfg.precompute_ax:

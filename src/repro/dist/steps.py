@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.gcn import GCNConfig, gcn_loss
+from repro.kernels.ops import spmm as spmm_dispatch
 from repro.dist.compression import (bf16_psum_mean, compressed_psum_mean,
                                     psum_mean)
 from repro.dist.sharding import CellPolicy
@@ -182,15 +183,18 @@ def init_gcn_train_state(params: PyTree, opt: Optimizer, nshards: int,
 
 def make_gcn_train_step(cfg: GCNConfig, opt: Optimizer, mesh, *,
                         axis_name: str = "data", compression=None,
-                        spmm: Callable = jnp.matmul) -> Callable:
+                        spmm: Callable = spmm_dispatch) -> Callable:
     """Data-parallel Cluster-GCN step over stacked cluster batches.
 
     The returned jit'd function maps
         (state, rng, batch_stacked) -> (state, loss, aux)
     where every `batch_stacked` leaf has leading dim G = mesh 'data' size
-    × clusters-per-shard (a ClusterBatch.astuple() stack). Each shard
-    takes the gradient of the mean loss over its own batches (dropout rng
-    folded per shard), then gradients mean-all-reduce across `axis_name`:
+    × clusters-per-shard (a ClusterBatch.astuple() stack; with a
+    sparse_adj batcher the adj leaf is a BlockEllAdj pytree whose leaves
+    stack/shard the same way, and each shard's Â·(XW) runs the
+    differentiable block-ELL spmm). Each shard takes the gradient of the
+    mean loss over its own batches (dropout rng folded per shard), then
+    gradients mean-all-reduce across `axis_name`:
       compression=None   exact fp32 psum
       compression="bf16" bf16 wire format
       compression=4|8    int4/int8 symmetric quant + error feedback

@@ -1,5 +1,9 @@
-from repro.kernels.ops import (spmm, spmm_dense, multi_head_attention,
-                               block_ell_from_dense, block_ell_from_csr)
-from repro.kernels.block_spmm import spmm_block_ell
+from repro.kernels.ops import (spmm, spmm_dense,
+                               multi_head_attention,
+                               block_ell_from_dense, block_ell_from_csr,
+                               block_ell_transpose,
+                               block_ell_adj_from_dense,
+                               block_ell_adj_from_csr)
+from repro.kernels.block_spmm import BlockEllAdj, spmm_block_ell, spmm_ell
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels import ref

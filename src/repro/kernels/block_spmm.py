@@ -1,5 +1,7 @@
 """Block-ELL sparse·dense matmul Pallas TPU kernel — the Cluster-GCN
-hot-spot Â'X adapted to the TPU memory hierarchy (DESIGN.md §3).
+hot-spot Â'X adapted to the TPU memory hierarchy (DESIGN.md §3) — plus
+the differentiable `BlockEllAdj` wrapper that makes it a first-class
+training backend (ISSUE 2).
 
 Format (host-built, see ops.py):
   blocks:     (nrb, K, B, B)  — dense value tiles, zero-padded
@@ -13,18 +15,58 @@ Kernel: grid (nrb, F/Fb, K). The scalar-prefetched block_cols drives the
 BlockSpec index_map for x, so the pipeline DMAs exactly the needed
 (B, Fb) tile of x from HBM into VMEM per step. The MXU sees only dense
 (B,B)@(B,Fb) tiles — 128-aligned. Accumulation in a VMEM fp32 scratch
-across the K (innermost, sequential) grid dimension.
+across the K (innermost, sequential) grid dimension. F that is not a
+multiple of `block_f` (including block_f > F) is zero-padded on the way
+in and sliced on the way out, so any GCN layer width works.
+
+Differentiable path (`BlockEllAdj` + `spmm_ell`):
+  `BlockEllAdj` is a pytree carrying the forward tiles AND the host-built
+  transpose (blocks_t/block_cols_t, see ops.block_ell_transpose). The
+  product y = Â x gets a `jax.custom_vjp` whose backward is
+      dx = Âᵀ ḡ  — the SAME block-ELL kernel on the transposed tiles —
+  so gradients never materialize a dense Â (dÂ is structurally zero:
+  the adjacency is data, not a parameter). This is the one spmm seam the
+  trainer (core.trainer), the shard_map DP step (dist.steps) and the
+  dry-run (launch.dryrun_gcn) all dispatch through; enable it end to end
+  with `train_cluster_gcn(..., sparse_adj=True)` or
+  `ClusterBatcher(..., sparse_adj=True)`.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 DEFAULT_BLOCK = 128
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("blocks", "block_cols",
+                                "blocks_t", "block_cols_t"),
+                   meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class BlockEllAdj:
+    """Block-ELL adjacency with its transpose, as one jit/vmap-able pytree.
+
+    blocks:       (nrb, K,  B, B)   forward value tiles of Â
+    block_cols:   (nrb, K)  int32   forward slot → column-block index
+    blocks_t:     (ncb, Kt, B, B)   value tiles of Âᵀ (backward pass)
+    block_cols_t: (ncb, Kt) int32
+
+    Built host-side by ops.block_ell_adj_from_dense / _from_csr. All four
+    leaves are data (no static fields), so ClusterBatch stacking, vmap
+    over per-shard batches and shard_map partitioning treat it like any
+    other batch array.
+    """
+    blocks: jnp.ndarray
+    block_cols: jnp.ndarray
+    blocks_t: jnp.ndarray
+    block_cols_t: jnp.ndarray
 
 
 def _spmm_kernel(block_cols_ref,          # scalar-prefetch (nrb, K)
@@ -59,8 +101,15 @@ def spmm_block_ell(blocks: jnp.ndarray, block_cols: jnp.ndarray,
     assert B == B2, "square blocks"
     n_cols, F = x.shape
     assert n_cols % B == 0, "x rows must be multiple of block size"
-    assert F % block_f == 0, f"F={F} must be a multiple of block_f={block_f}"
-    nf = F // block_f
+    if K == 0:
+        # no slots: the product is identically zero, and a 0-size grid
+        # dimension would leave the output buffer unwritten.
+        return jnp.zeros((nrb * B, F), x.dtype)
+    # pad the feature dim up to a block_f multiple (covers block_f > F)
+    Fp = ((F + block_f - 1) // block_f) * block_f
+    if Fp != F:
+        x = jnp.pad(x, ((0, 0), (0, Fp - F)))
+    nf = Fp // block_f
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -75,8 +124,64 @@ def spmm_block_ell(blocks: jnp.ndarray, block_cols: jnp.ndarray,
     fn = pl.pallas_call(
         _spmm_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nrb * B, F), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((nrb * B, Fp), x.dtype),
         interpret=interpret,
         name="block_ell_spmm",
     )
-    return fn(block_cols.astype(jnp.int32), blocks, x)
+    out = fn(block_cols.astype(jnp.int32), blocks, x)
+    return out[:, :F] if Fp != F else out
+
+
+# ----------------------------------------------------------------------
+# differentiable product
+# ----------------------------------------------------------------------
+def _apply(impl: str, blocks, block_cols, x, block_f: int):
+    """One block-ELL product via the resolved backend."""
+    if blocks.shape[1] == 0:          # K = 0: identically-zero product
+        return jnp.zeros((blocks.shape[0] * blocks.shape[2], x.shape[1]),
+                         x.dtype)
+    if impl == "ref":
+        from repro.kernels.ref import spmm_block_ell_ref
+        return spmm_block_ell_ref(blocks, block_cols, x)
+    return spmm_block_ell(blocks, block_cols, x, block_f=block_f,
+                          interpret=(impl == "interpret"))
+
+
+def _zero_cotangent(t):
+    """Symbolic-zero cotangent: float0 for integer leaves (block_cols)."""
+    if jnp.issubdtype(t.dtype, jnp.integer) or t.dtype == jnp.bool_:
+        return np.zeros(t.shape, jax.dtypes.float0)
+    return jnp.zeros_like(t)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _spmm_ell(impl: str, block_f: int, adj: BlockEllAdj,
+              x: jnp.ndarray) -> jnp.ndarray:
+    return _apply(impl, adj.blocks, adj.block_cols, x, block_f)
+
+
+def _spmm_ell_fwd(impl, block_f, adj, x):
+    y = _apply(impl, adj.blocks, adj.block_cols, x, block_f)
+    return y, adj
+
+
+def _spmm_ell_bwd(impl, block_f, adj, g):
+    # dx = Âᵀ ḡ via the transposed block-ELL tiles; the adjacency is data
+    # (never a parameter) so its cotangent is (symbolically) zero.
+    dx = _apply(impl, adj.blocks_t, adj.block_cols_t, g, block_f)
+    d_adj = jax.tree_util.tree_map(_zero_cotangent, adj)
+    return d_adj, dx
+
+
+_spmm_ell.defvjp(_spmm_ell_fwd, _spmm_ell_bwd)
+
+
+def spmm_ell(adj: BlockEllAdj, x: jnp.ndarray, *, impl: str = "ref",
+             block_f: int = 128) -> jnp.ndarray:
+    """Differentiable y = Â x on a BlockEllAdj.
+
+    impl: 'pallas' | 'interpret' (Pallas kernel, TPU / interpreter) |
+    'ref' (pure-XLA oracle — the CPU training path). Gradients w.r.t. x
+    flow through the custom VJP (Âᵀ product); Â itself gets zeros.
+    """
+    return _spmm_ell(impl, block_f, adj, x)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref as _ref
-from repro.kernels.block_spmm import spmm_block_ell
+from repro.kernels.block_spmm import BlockEllAdj, spmm_block_ell, spmm_ell
 from repro.kernels.flash_attention import flash_attention
 
 Mode = Literal["auto", "pallas", "interpret", "ref", "blocked"]
@@ -31,6 +31,14 @@ def _resolve(mode: Mode) -> str:
         # blocked = pure-XLA flash-style attention: same FLOPs/memory
         # profile as the Pallas kernel, so the dry-run roofline is honest
         return "pallas" if _on_tpu() else "blocked"
+    return mode
+
+
+def _resolve_spmm(mode: Mode) -> str:
+    """SpMM backend: Pallas kernel on TPU, pure-XLA oracle elsewhere
+    ('blocked' has no spmm meaning and maps to the oracle too)."""
+    if mode in ("auto", "blocked"):
+        return "pallas" if _on_tpu() else "ref"
     return mode
 
 
@@ -49,30 +57,40 @@ def block_ell_from_dense(adj: np.ndarray, block: int = 128,
     padded[:n, :m] = adj
     tiles = padded.reshape(nrb, B, ncb, B).transpose(0, 2, 1, 3)  # (nrb,ncb,B,B)
     nz = np.abs(tiles).sum(axis=(2, 3)) > 0                        # (nrb, ncb)
-    K = k_slots if k_slots is not None else max(1, int(nz.sum(1).max()))
+    need = int(nz.sum(1).max()) if nz.size else 0
+    K = k_slots if k_slots is not None else max(1, need)
+    if need > K:
+        raise ValueError(
+            f"k_slots={K} drops non-zero tiles (need {need})")
     blocks = np.zeros((nrb, K, B, B), adj.dtype)
     cols = np.zeros((nrb, K), np.int32)
     for i in range(nrb):
-        cbs = np.where(nz[i])[0][:K]
+        cbs = np.where(nz[i])[0]
         blocks[i, :len(cbs)] = tiles[i, cbs]
         cols[i, :len(cbs)] = cbs
     return blocks, cols
 
 
 def block_ell_from_csr(indptr, indices, data, n_cols: int, block: int = 128,
-                       k_slots: int | None = None):
+                       k_slots: int | None = None,
+                       n_rows: int | None = None):
     """Block-ELL from CSR without densifying the full matrix (full-graph
-    inference path). Memory ~ nnz-blocks · B²."""
+    inference path). Memory ~ nnz-blocks · B². `n_rows` pads the row dim
+    beyond len(indptr)-1 (fixed-shape cluster batches)."""
     n = len(indptr) - 1
     B = block
-    nrb, ncb = -(-n // B), -(-n_cols // B)
+    nrb, ncb = -(-max(n, n_rows or 0) // B), -(-n_cols // B)
     rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
     rb, cb = rows // B, indices // B
     key = rb * ncb + cb
     uniq = np.unique(key)
     slot_of = {int(k): j for j, k in enumerate(uniq)}
     per_row = np.bincount(uniq // ncb, minlength=nrb)
-    K = k_slots if k_slots is not None else max(1, int(per_row.max()))
+    need = int(per_row.max()) if per_row.size else 0
+    K = k_slots if k_slots is not None else max(1, need)
+    if need > K:
+        raise ValueError(
+            f"k_slots={K} drops non-zero tiles (need {need})")
     blocks = np.zeros((nrb, K, B, B), np.float32)
     cols = np.zeros((nrb, K), np.int32)
     # slot index within row-block for each unique block
@@ -95,16 +113,82 @@ def block_ell_from_csr(indptr, indices, data, n_cols: int, block: int = 128,
     return blocks, cols
 
 
+def block_ell_transpose(blocks: np.ndarray, block_cols: np.ndarray,
+                        n_col_blocks: int, k_slots: int | None = None):
+    """Host-side transpose of a block-ELL matrix: tile (i, →c) becomes
+    tile (c, →i) transposed. All-zero tiles (ELL padding slots) are
+    skipped so padding never inflates the transposed K. Duplicate
+    (row, col) tiles accumulate — the spmm sums over slots, so this stays
+    lossless. Raises if an explicit k_slots would drop a non-zero tile."""
+    blocks = np.asarray(blocks)
+    block_cols = np.asarray(block_cols)
+    nrb, K, B, _ = blocks.shape
+    ncb = n_col_blocks
+    entries = [(int(c), i, k) for i in range(nrb) for k, c in
+               enumerate(block_cols[i, :K]) if np.any(blocks[i, k])]
+    counts = np.zeros(ncb, np.int64)
+    for c, _, _ in entries:
+        counts[c] += 1
+    K_t = k_slots if k_slots is not None else max(1, int(counts.max())
+                                                  if len(counts) else 1)
+    if len(entries) and counts.max() > K_t:
+        raise ValueError(
+            f"k_slots={K_t} drops non-zero transposed tiles "
+            f"(need {int(counts.max())})")
+    blocks_t = np.zeros((ncb, K_t, B, B), blocks.dtype)
+    cols_t = np.zeros((ncb, K_t), np.int32)
+    fill = np.zeros(ncb, np.int64)
+    for c, i, k in entries:
+        s = int(fill[c])
+        blocks_t[c, s] = blocks[i, k].T
+        cols_t[c, s] = i
+        fill[c] += 1
+    return blocks_t, cols_t
+
+
+def block_ell_adj_from_dense(adj: np.ndarray, block: int = 128,
+                             k_slots: int | None = None,
+                             k_slots_t: int | None = None) -> BlockEllAdj:
+    """BlockEllAdj (forward + transposed tiles) from a dense matrix.
+    Leaves stay host-side numpy — like every other ClusterBatch field —
+    so the epoch loop never round-trips them through the device."""
+    blocks, cols = block_ell_from_dense(adj, block, k_slots)
+    ncb = -(-adj.shape[1] // block)
+    kt = k_slots_t if k_slots_t is not None else k_slots
+    blocks_t, cols_t = block_ell_transpose(blocks, cols, ncb, kt)
+    return BlockEllAdj(blocks=blocks, block_cols=cols,
+                       blocks_t=blocks_t, block_cols_t=cols_t)
+
+
+def block_ell_adj_from_csr(indptr, indices, data, n_cols: int,
+                           block: int = 128, k_slots: int | None = None,
+                           k_slots_t: int | None = None,
+                           n_rows: int | None = None) -> BlockEllAdj:
+    """BlockEllAdj from CSR without densifying — the ClusterBatcher
+    sparse path (normalize_csr output goes straight to tiles)."""
+    blocks, cols = block_ell_from_csr(indptr, indices, data, n_cols,
+                                      block, k_slots, n_rows=n_rows)
+    ncb = -(-n_cols // block)
+    kt = k_slots_t if k_slots_t is not None else k_slots
+    blocks_t, cols_t = block_ell_transpose(blocks, cols, ncb, kt)
+    return BlockEllAdj(blocks=blocks, block_cols=cols,
+                       blocks_t=blocks_t, block_cols_t=cols_t)
+
+
 # ----------------------------------------------------------------------
 # SpMM dispatch
 # ----------------------------------------------------------------------
-def spmm(blocks: jnp.ndarray, block_cols: jnp.ndarray, x: jnp.ndarray, *,
-         mode: Mode = "auto", block_f: int = 128) -> jnp.ndarray:
-    m = _resolve(mode)
-    if m == "ref":
-        return _ref.spmm_block_ell_ref(blocks, block_cols, x)
-    return spmm_block_ell(blocks, block_cols, x, block_f=block_f,
-                          interpret=(m == "interpret"))
+def spmm(adj, x: jnp.ndarray, *, mode: Mode = "auto",
+         block_f: int = 128) -> jnp.ndarray:
+    """Adjacency-polymorphic y = Â x — the single spmm seam every
+    training path (trainer, shard_map DP step, dry-run) dispatches
+    through. A dense `adj` array keeps the XLA matmul; a `BlockEllAdj`
+    routes to the differentiable block-ELL product (Pallas kernel on
+    TPU, pure-XLA oracle elsewhere; gradients via the transposed tiles,
+    never a dense Â)."""
+    if isinstance(adj, BlockEllAdj):
+        return spmm_ell(adj, x, impl=_resolve_spmm(mode), block_f=block_f)
+    return adj @ x
 
 
 def spmm_dense(adj: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:

@@ -14,6 +14,9 @@ Variants (the §Perf hillclimb surface for target C):
   ax     — C2: + paper §6.2 A'X precompute (first propagation hoisted
            to the (cheap, host) batch builder)
   tp     — C3: + tensor-parallel hidden (alternating col/row sharding)
+  sparse — C5: Â as a BlockEllAdj (block-ELL tiles + transpose), every
+           Â·(XW) fwd AND bwd through the differentiable block-ELL spmm
+           instead of a dense (cap, cap) matmul
 """
 import argparse
 import dataclasses
@@ -27,6 +30,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.gcn import GCNConfig, gcn_loss, init_gcn
+from repro.kernels import BlockEllAdj
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import (axis_size, data_axes, make_production_mesh,
                                use_mesh)
@@ -59,8 +63,19 @@ def build(variant: str, mesh):
 
     # batch specs: stacked over the data axis
     sd = jax.ShapeDtypeStruct
+    if variant == "sparse":
+        # block-ELL Â at the shape the batcher emits: K = cap/B (lossless
+        # worst case; real fill is what bench_spmm measures)
+        nrb = cap // 128
+        adj_spec = BlockEllAdj(
+            blocks=sd((G, nrb, nrb, 128, 128), dt),
+            block_cols=sd((G, nrb, nrb), jnp.int32),
+            blocks_t=sd((G, nrb, nrb, 128, 128), dt),
+            block_cols_t=sd((G, nrb, nrb), jnp.int32))
+    else:
+        adj_spec = sd((G, cap, cap), dt)
     batch = (
-        sd((G, cap, cap), dt),                       # adj (normalized)
+        adj_spec,                                    # adj (normalized)
         sd((G, cap, CFG["in_dim"]), dt),             # features
         sd((G, cap, CFG["out_dim"]), jnp.float32),   # labels (multilabel)
         sd((G, cap), jnp.bool_),                     # node mask
@@ -131,6 +146,12 @@ def run(variant: str, multi_pod: bool = False) -> dict:
         compiled = lowered.compile()
         dt = time.perf_counter() - t0
         ma = compiled.memory_analysis()
+        # this jaxlib's CPU CompiledMemoryStats has no peak_memory_in_bytes
+        # — fall back to the arg+out+temp upper bound
+        peak = getattr(ma, "peak_memory_in_bytes", None)
+        if peak is None:
+            peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes)
         walked = analyze_hlo(compiled.as_text())
     rec = dict(arch="clustergcn-ppi-sota", shape="train_cluster",
                mesh="multipod" if multi_pod else "pod", tag=variant,
@@ -138,7 +159,7 @@ def run(variant: str, multi_pod: bool = False) -> dict:
                flops_per_device=walked["flops"],
                bytes_accessed_per_device=walked["bytes"],
                collectives=walked["collectives"],
-               memory={"peak_memory_in_bytes": int(ma.peak_memory_in_bytes),
+               memory={"peak_memory_in_bytes": int(peak),
                        "argument_size_in_bytes":
                            int(ma.argument_size_in_bytes),
                        "temp_size_in_bytes": int(ma.temp_size_in_bytes)},
@@ -152,11 +173,12 @@ def run(variant: str, multi_pod: bool = False) -> dict:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--variant", default="all",
-                    choices=("base", "bf16", "ax", "tp", "q4", "all"))
+                    choices=("base", "bf16", "ax", "tp", "q4", "sparse",
+                             "all"))
     ap.add_argument("--multipod", action="store_true")
     args = ap.parse_args()
-    variants = ("base", "bf16", "ax", "tp", "q4") if args.variant == "all" \
-        else (args.variant,)
+    variants = ("base", "bf16", "ax", "tp", "q4", "sparse") \
+        if args.variant == "all" else (args.variant,)
     for v in variants:
         r = run(v, args.multipod)
         coll = sum(c["bytes"] for c in r["collectives"].values())

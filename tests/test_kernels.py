@@ -68,6 +68,84 @@ def test_block_ell_from_csr_matches_dense():
     np.testing.assert_allclose(r2, dense, atol=1e-6)
 
 
+@pytest.mark.parametrize("n,m,B,density", [
+    (96, 96, 32, 0.05),        # element-sparse (NOT block-structured)
+    (100, 84, 16, 0.1),        # ragged: n, m not block multiples
+    (64, 128, 32, 0.5),
+])
+def test_block_ell_from_csr_random_graphs(n, m, B, density):
+    """CSR and dense builders agree on arbitrary random sparsity (the
+    batcher's sparse path only ever sees the CSR builder)."""
+    rng = np.random.default_rng(n * 3 + m)
+    dense = ((rng.random((n, m)) < density)
+             * rng.normal(size=(n, m))).astype(np.float32)
+    import scipy.sparse as sp
+    csr = sp.csr_matrix(dense)
+    b1, c1 = block_ell_from_dense(dense, B)
+    b2, c2 = block_ell_from_csr(csr.indptr, csr.indices, csr.data, m, B)
+    ncb = -(-m // B)
+    r1 = dense_from_block_ell(b1, c1, ncb * B)
+    r2 = dense_from_block_ell(b2, c2, ncb * B)
+    np.testing.assert_allclose(r1[:n, :m], dense)
+    np.testing.assert_allclose(r2[:n, :m], dense, atol=1e-6)
+    # and the two products agree on a shared x
+    x = rng.normal(size=(ncb * B, 24)).astype(np.float32)
+    y1 = np.asarray(spmm_block_ell_ref(jnp.asarray(b1), jnp.asarray(c1),
+                                       jnp.asarray(x)))
+    y2 = np.asarray(spmm_block_ell_ref(jnp.asarray(b2), jnp.asarray(c2),
+                                       jnp.asarray(x)))
+    np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+
+def test_block_ell_from_csr_row_padding():
+    """n_rows pads the row-block dim — fixed-shape cluster batches."""
+    rng = np.random.default_rng(4)
+    dense = _block_sparse(rng, 32, 64, 16, 0.6, np.float32)
+    import scipy.sparse as sp
+    csr = sp.csr_matrix(dense)
+    b, c = block_ell_from_csr(csr.indptr, csr.indices, csr.data, 64, 16,
+                              n_rows=64)
+    assert b.shape[0] == 4                      # 64/16 row blocks
+    r = dense_from_block_ell(b, c, 64)
+    np.testing.assert_allclose(r[:32], dense)
+    np.testing.assert_allclose(r[32:], 0.0)
+
+
+def test_builders_reject_lossy_k_slots():
+    """Explicit k_slots that would drop non-zero tiles raises (the
+    builders are lossless or loud — never silently wrong)."""
+    rng = np.random.default_rng(2)
+    dense = _block_sparse(rng, 32, 96, 32, 1.0, np.float32)  # 3 col blocks
+    import scipy.sparse as sp
+    csr = sp.csr_matrix(dense)
+    with pytest.raises(ValueError):
+        block_ell_from_dense(dense, 32, k_slots=2)
+    with pytest.raises(ValueError):
+        block_ell_from_csr(csr.indptr, csr.indices, csr.data, 96, 32,
+                           k_slots=2)
+    # k_slots=0 on an all-zero matrix is fine (K=0 empty format)
+    b, c = block_ell_from_dense(np.zeros((32, 32), np.float32), 32,
+                                k_slots=0)
+    assert b.shape[1] == 0
+
+
+@pytest.mark.parametrize("F,block_f", [(40, 128),   # block_f > F
+                                       (24, 16),    # F % block_f != 0
+                                       (1, 128)])   # single column
+def test_spmm_non_divisible_F(F, block_f):
+    """The kernel pads the feature dim internally: any layer width works
+    with any block_f (regression for GCN hidden/out dims like 41)."""
+    rng = np.random.default_rng(F)
+    dense = _block_sparse(rng, 128, 128, 128, 0.7, np.float32)
+    blocks, cols = block_ell_from_dense(dense, 128)
+    x = rng.normal(size=(128, F)).astype(np.float32)
+    want = dense @ x
+    got = np.asarray(spmm_block_ell(
+        jnp.asarray(blocks), jnp.asarray(cols), jnp.asarray(x),
+        block_f=block_f, interpret=True))
+    np.testing.assert_allclose(got, want, atol=2e-3)
+
+
 ATTN_CASES = [
     dict(causal=True),
     dict(causal=False),
