@@ -3,14 +3,25 @@
 The paper benchmarked PyTorch-vs-TF sparse ops; ours compares the
 backends available to this framework: XLA dense matmul (what dense
 cluster batches use), scipy CSR (host baseline), the forward-only
-block-ELL product, and — new — the DIFFERENTIABLE block-ELL path
-(BlockEllAdj + custom VJP) timed forward AND forward+backward, which is
-what training with `sparse_adj=True` actually runs. The Pallas kernel's
-TPU perf is estimated analytically from block fill rate since interpret
-mode measures Python, not the MXU. Besides the CSV rows, the run emits
-machine-readable BENCH_spmm.json (benchmarks.common.write_bench_json)
-so CI tracks the perf trajectory."""
+block-ELL product, and the DIFFERENTIABLE block-ELL path (BlockEllAdj +
+custom VJP) timed forward AND forward+backward — what training with
+`sparse_adj=True` actually runs. New with ISSUE 3:
+
+  * a k_slots sweep (lossless floor → cap/B) and a bucketed-K row —
+    the fill-adaptive `ClusterBatcher(k_slots="auto")` path where K
+    tracks the real block fill instead of the worst case;
+  * a batcher-throughput section on a 10k-node graph: vectorized host
+    tile builders vs the loop-based `_ref` oracles, batches/sec, and
+    host build time vs device step time (the prefetch overlap budget).
+
+The Pallas kernel's TPU perf is estimated analytically from block fill
+since interpret mode measures Python, not the MXU. Besides the CSV
+rows, the run emits machine-readable BENCH_spmm.json
+(benchmarks.common.write_bench_json); CI uploads it as an artifact and
+gates on the fwd+bwd row via benchmarks/check_regression.py."""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -18,10 +29,22 @@ import numpy as np
 
 from benchmarks.common import csv_row, section, timed, write_bench_json
 from repro.core import ClusterBatcher
+from repro.core.kslots import pow2_ceil
 from repro.graph import make_dataset, partition_graph
-from repro.kernels import block_ell_adj_from_dense, block_ell_from_dense
+from repro.kernels import (block_ell_adj_from_csr, block_ell_adj_from_dense,
+                           block_ell_from_csr_ref, block_ell_from_dense,
+                           block_ell_needed_k, block_ell_transpose_ref)
 from repro.kernels.ops import spmm
 from repro.kernels.ref import spmm_block_ell_ref
+
+ITERS = 10
+
+
+def best(fn, iters=ITERS, rounds=5):
+    """min of `rounds` timed() means — host timings on shared (CI) boxes
+    are contention-noisy and the least-disturbed round is the honest
+    estimate of the op's cost; every row uses it so ratios stay fair."""
+    return min(timed(fn, iters=iters)[0] for _ in range(rounds))
 
 
 def run(quick: bool = True):
@@ -31,6 +54,7 @@ def run(quick: bool = True):
     b = ClusterBatcher(g, parts, clusters_per_batch=2, seed=0)
     batch = b.batch_from_clusters([0, 1])
     n = b.node_cap
+    cap_k = n // 128
     rows = []
 
     def record(name, seconds, **meta):
@@ -45,28 +69,31 @@ def run(quick: bool = True):
         xd = jnp.asarray(x)
         ad = jnp.asarray(adj)
         f_dense = jax.jit(lambda a, v: a @ v)
-        t_dense, _ = timed(lambda: np.asarray(f_dense(ad, xd)))
+        t_dense = best(lambda: np.asarray(f_dense(ad, xd)))
 
         import scipy.sparse as sp
         a_csr = sp.csr_matrix(adj)
-        t_csr, _ = timed(lambda: a_csr @ x)
+        t_csr = best(lambda: a_csr @ x)
 
         blocks, cols = block_ell_from_dense(adj, 128)
         bj, cj = jnp.asarray(blocks), jnp.asarray(cols)
         f_bell = jax.jit(lambda bb, cc, v: spmm_block_ell_ref(bb, cc, v))
-        t_bell, _ = timed(lambda: np.asarray(f_bell(bj, cj, xd)))
+        t_bell = best(lambda: np.asarray(f_bell(bj, cj, xd)))
 
         # the differentiable training path: BlockEllAdj + custom VJP
         # (backward = transposed-tile product, dense Â never built)
-        bell = block_ell_adj_from_dense(adj, 128)
+        # device-resident like `ad` — training with prefetch>0 device_puts
+        # batches on the producer thread, so steady-state steps see device
+        # arrays; timing host→device transfer here would double-count it
+        bell = jax.device_put(block_ell_adj_from_dense(adj, 128))
         f_fwd = jax.jit(spmm)
-        t_bell_fwd, _ = timed(lambda: np.asarray(f_fwd(bell, xd)))
+        t_bell_fwd = best(lambda: np.asarray(f_fwd(bell, xd)))
         # squared loss so the backward depends on x (a plain .sum() would
         # let XLA constant-fold the whole fwd+bwd away)
         f_fb = jax.jit(jax.grad(lambda v, a: (spmm(a, v) ** 2).sum()))
-        t_bell_fb, _ = timed(lambda: np.asarray(f_fb(xd, bell)))
+        t_bell_fb = best(lambda: np.asarray(f_fb(xd, bell)), rounds=8)
         f_dfb = jax.jit(jax.grad(lambda v, a: ((a @ v) ** 2).sum()))
-        t_dense_fb, _ = timed(lambda: np.asarray(f_dfb(xd, ad)))
+        t_dense_fb = best(lambda: np.asarray(f_dfb(xd, ad)), rounds=8)
 
         nnz = int((adj != 0).sum())
         fill = nnz / blocks[:, :, 0, 0].size / (128 * 128) \
@@ -87,6 +114,104 @@ def run(quick: bool = True):
                speedup_vs_dense=round(t_dense_fb / t_bell_fb, 2))
         record(f"table6/F{F}/xla-dense-fwdbwd", t_dense_fb)
 
+        # ------------------------------------------------------------
+        # k_slots sweep: the same batch at explicit K from the lossless
+        # floor up to the cap/B worst case (what the sparse path always
+        # paid before fill-adaptive buckets)
+        # ------------------------------------------------------------
+        nf, nt = block_ell_needed_k(a_csr.indptr, a_csr.indices, 128, n)
+        need = max(nf, nt, 1)
+        for k in sorted({need, min(pow2_ceil(need), cap_k), cap_k}):
+            bell_k = jax.device_put(
+                block_ell_adj_from_dense(adj, 128, k_slots=k, k_slots_t=k))
+            t_k = best(lambda: np.asarray(f_fb(xd, bell_k)))
+            record(f"table6/F{F}/kslots-sweep/K{k}", t_k, k_slots=k,
+                   cap_k=cap_k,
+                   speedup_vs_dense=round(t_dense_fb / t_k, 2))
+
+        # ------------------------------------------------------------
+        # bucketed-K: ClusterBatcher(k_slots="auto") on the same graph
+        # and cap — single-cluster batches where the real fill is far
+        # below cap/B, so the bucket ladder picks K ≪ cap/B
+        # ------------------------------------------------------------
+        b_auto = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0,
+                                node_cap=n, sparse_adj=True,
+                                k_slots="auto")
+        bell_auto = jax.device_put(b_auto.batch_from_clusters([0]).adj)
+        k_auto = int(bell_auto.blocks.shape[1])
+        b_cap = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0,
+                               node_cap=n, sparse_adj=True)
+        bell_cap = jax.device_put(b_cap.batch_from_clusters([0]).adj)
+        t_auto = best(lambda: np.asarray(f_fb(xd, bell_auto)))
+        t_cap = best(lambda: np.asarray(f_fb(xd, bell_cap)))
+        record(f"table6/F{F}/block-ell-vjp-fwdbwd/bucketed-k", t_auto,
+               k_slots=k_auto, cap_k=cap_k,
+               k_buckets=list(b_auto.k_plan.buckets),
+               speedup_vs_capK=round(t_cap / t_auto, 2),
+               speedup_vs_dense=round(t_dense_fb / t_auto, 2))
+
+    # ----------------------------------------------------------------
+    # batcher throughput on a 10k-node graph: the host tile builders
+    # (vectorized vs loop-ref) and host build vs device step — the
+    # budget the prefetch pipeline (repro.core.prefetch) has to hide.
+    # Reddit-like density (real Reddit averages ~490 edges/node; this
+    # SBM uses 300 within + 8 between), clusters dense within — the
+    # paper's regime, and the worst case for per-edge Python loops.
+    # ----------------------------------------------------------------
+    section("Batcher throughput: vectorized host tiling, 10k nodes")
+    from repro.graph.generators import SBMSpec, stochastic_block_model
+    g10 = stochastic_block_model(SBMSpec(
+        num_nodes=10_000, num_communities=24, num_classes=41,
+        feature_dim=128, avg_within_degree=300.0, avg_between_degree=8.0,
+        seed=0))
+    parts10, _ = partition_graph(g10, 24, method="metis", seed=0)
+    b10 = ClusterBatcher(g10, parts10, clusters_per_batch=2, seed=0,
+                         sparse_adj=True, k_slots="auto")
+    cap10 = b10.node_cap
+    t_batch, bref = timed(lambda: b10.batch_from_clusters([0, 1]),
+                          iters=5)
+    k10 = int(bref.adj.blocks.shape[1])
+
+    # builder-only comparison on the identical normalized batch CSR
+    ip, ix, dt = b10.batch_csr([0, 1])
+
+    def build_vectorized():
+        # assume_unique=True mirrors the real training path: the batcher
+        # passes it because normalize_csr output is canonical
+        return block_ell_adj_from_csr(ip, ix, dt, n_cols=cap10, block=128,
+                                      k_slots=k10, k_slots_t=k10,
+                                      n_rows=cap10, assume_unique=True)
+
+    def build_loop_ref():
+        blocks, cols = block_ell_from_csr_ref(ip, ix, dt, n_cols=cap10,
+                                              block=128, k_slots=k10,
+                                              n_rows=cap10)
+        return block_ell_transpose_ref(blocks, cols, cap10 // 128, k10)
+
+    # best-of-3 rounds: host timings on shared CI boxes are noisy and a
+    # single contended round shouldn't decide the speedup row
+    t_vec = best(build_vectorized, rounds=8)
+    t_loop = best(build_loop_ref, iters=5, rounds=8)
+
+    # the device step this build must hide behind (prefetch overlap)
+    F = 128
+    x10 = np.random.default_rng(1).normal(size=(cap10, F)) \
+        .astype(np.float32)
+    f_fb10 = jax.jit(jax.grad(lambda v, a: (spmm(a, v) ** 2).sum()))
+    adj10 = jax.device_put(bref.adj)
+    x10d = jnp.asarray(x10)
+    t_step10 = best(lambda: np.asarray(f_fb10(x10d, adj10)))
+
+    record("batcher10k/build-vectorized", t_vec,
+           num_nodes=int(g10.num_nodes), nnz_batch=int(len(ix)),
+           k_slots=k10)
+    record("batcher10k/build-loop-ref", t_loop,
+           speedup_vectorized=round(t_loop / t_vec, 1))
+    record("batcher10k/batch-from-clusters", t_batch,
+           batches_per_s=round(1.0 / t_batch, 1), node_cap=cap10)
+    record("batcher10k/step-fwdbwd-F128", t_step10,
+           host_build_over_step=round(t_batch / t_step10, 2))
+
     out = write_bench_json("spmm", dict(
         bench="spmm", node_cap=n, quick=quick, backend=jax.default_backend(),
         rows=rows))
@@ -94,5 +219,16 @@ def run(quick: bool = True):
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="CPU-budgeted pass (the default; CI runs this)")
+    mode.add_argument("--full", action="store_true",
+                      help="paper-scale settings (adds F=512)")
+    args = ap.parse_args()
+    run(quick=not args.full)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,0 +1,86 @@
+"""CI perf gate: compare a fresh BENCH_*.json against the committed
+baseline and fail on regression.
+
+Usage:
+    python benchmarks/check_regression.py BASELINE.json NEW.json \
+        --rows table6/F128/block-ell-vjp-fwdbwd --tol 0.25
+
+For every baseline row whose name exactly matches one of the --rows
+keys (exact, not substring — a key must not accidentally guard sibling
+rows like `.../bucketed-k`, whose higher baseline would make a stricter
+floor than intended), the same-named row must exist in NEW and must not
+have regressed by more than --tol (fraction). Rows carrying
+`speedup_vs_dense` are compared on
+that RATIO (same-machine normalized — robust to CI runners being slower
+or faster than the machine that committed the baseline); rows without
+it fall back to wall-clock seconds, which only makes sense when both
+files come from comparable machines.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _index(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc.get("rows", [])}
+
+
+def check(baseline: str, new: str, keys: list[str], tol: float) -> list[str]:
+    old_rows, new_rows = _index(baseline), _index(new)
+    errors, guarded = [], []
+    for key in keys:
+        # every requested guard must resolve — a renamed/misspelled row
+        # must fail the gate, not silently disable it
+        if key in old_rows:
+            guarded.append(key)
+        else:
+            errors.append(f"--rows key {key!r} not in baseline {baseline}")
+    for name in guarded:
+        if name not in new_rows:
+            errors.append(f"{name}: row disappeared from {new}")
+            continue
+        old, cur = old_rows[name], new_rows[name]
+        if "speedup_vs_dense" in old and "speedup_vs_dense" in cur:
+            lo = old["speedup_vs_dense"] * (1.0 - tol)
+            if cur["speedup_vs_dense"] < lo:
+                errors.append(
+                    f"{name}: speedup_vs_dense {cur['speedup_vs_dense']} "
+                    f"< {lo:.2f} (baseline {old['speedup_vs_dense']} "
+                    f"- {tol:.0%})")
+            else:
+                print(f"ok {name}: speedup_vs_dense "
+                      f"{cur['speedup_vs_dense']} vs baseline "
+                      f"{old['speedup_vs_dense']} (tol {tol:.0%})")
+        else:
+            hi = old["seconds"] * (1.0 + tol)
+            if cur["seconds"] > hi:
+                errors.append(
+                    f"{name}: {cur['seconds']:.6f}s > {hi:.6f}s "
+                    f"(baseline {old['seconds']:.6f}s + {tol:.0%})")
+            else:
+                print(f"ok {name}: {cur['seconds']:.6f}s vs baseline "
+                      f"{old['seconds']:.6f}s (tol {tol:.0%})")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--rows", nargs="+",
+                    default=["table6/F128/block-ell-vjp-fwdbwd"],
+                    help="exact row names to guard")
+    ap.add_argument("--tol", type=float, default=0.25)
+    args = ap.parse_args()
+    errors = check(args.baseline, args.new, args.rows, args.tol)
+    for e in errors:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+    sys.exit(1 if errors else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,8 @@ MXU tiles line up.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Sequence, Tuple
+import warnings
+from typing import Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -75,6 +76,21 @@ class ClusterBatcher:
       dense (cap, cap) block — the differentiable Pallas spmm path.
     block_size: tile edge B of the block-ELL format (node_cap must be a
       multiple of it; the default matches pad_multiple=128 / the MXU).
+    k_slots: ELL slot-count policy for the sparse path:
+      "cap"  — K pinned at the lossless worst case cap/B for every batch
+               (one jit variant; heavy zero padding at low block fill);
+      "auto" — fill-adaptive buckets (repro.core.kslots): a few epoch-0
+               batches are sampled at init to pick a small ladder of
+               power-of-two K buckets (cap/B always the last, lossless
+               fallback), and each batch is built at the smallest bucket
+               that holds it losslessly. K is a shape dim, so jax.jit's
+               shape-keyed cache compiles at most len(buckets) step
+               variants while FLOPs/memory track the real fill;
+      int    — fixed explicit K; the builders raise if it would drop a
+               non-zero tile (lossless or loud, never silently wrong).
+      For async host-side batch construction overlapping the device step
+      see the `prefetch=` flag of core.trainer.train_cluster_gcn
+      (repro.core.prefetch) — batch order is identical either way.
     """
     graph: CSRGraph
     parts: Array
@@ -87,6 +103,7 @@ class ClusterBatcher:
     drop_overflow: bool = True
     sparse_adj: bool = False
     block_size: int = 128
+    k_slots: Union[int, str] = "cap"
 
     def __post_init__(self):
         self.parts = np.asarray(self.parts)
@@ -102,36 +119,90 @@ class ClusterBatcher:
                                       self.pad_multiple)
         self._sizes = sizes
         self.overflow_count = 0
+        self._overflow_warned = False
         if self.sparse_adj and self.node_cap % self.block_size:
             raise ValueError(
                 f"sparse_adj needs node_cap ({self.node_cap}) divisible by "
                 f"block_size ({self.block_size})")
+        if isinstance(self.k_slots, str) and self.k_slots not in ("cap",
+                                                                  "auto"):
+            raise ValueError(
+                f"k_slots must be 'cap', 'auto' or an int; "
+                f"got {self.k_slots!r}")
+        self.k_plan = None
+        if self.sparse_adj and self.k_slots == "auto":
+            from repro.core.kslots import plan_k_buckets
+            self.k_plan = plan_k_buckets(self)
 
     # ------------------------------------------------------------------
-    def batch_from_clusters(self, cluster_ids: Sequence[int]) -> ClusterBatch:
+    def _batch_nodes(self, cluster_ids: Sequence[int],
+                     count_overflow: bool = True) -> Array:
+        """Union of the chosen clusters' nodes, truncated to node_cap
+        (loudly, when counting) — the one place overflow is handled."""
         nodes = np.concatenate([self._members[t] for t in cluster_ids])
         if len(nodes) > self.node_cap:
             if not self.drop_overflow:
                 raise ValueError(
                     f"batch of {len(nodes)} nodes exceeds cap {self.node_cap}")
-            self.overflow_count += len(nodes) - self.node_cap
+            if count_overflow:
+                self.overflow_count += len(nodes) - self.node_cap
+                if not self._overflow_warned:
+                    self._overflow_warned = True
+                    warnings.warn(
+                        f"ClusterBatcher dropped "
+                        f"{len(nodes) - self.node_cap} overflow nodes "
+                        f"(batch of {len(nodes)} > node_cap "
+                        f"{self.node_cap}); raise node_cap or lower "
+                        f"clusters_per_batch — cumulative count in "
+                        f"padding_stats()['overflow_count']", stacklevel=3)
             nodes = nodes[:self.node_cap]
+        return nodes
+
+    def batch_csr(self, cluster_ids: Sequence[int]) -> Tuple[Array, Array,
+                                                             Array]:
+        """Normalized CSR (indptr, indices, data) of the q-cluster union
+        batch — the exact matrix batch_from_clusters turns into tiles
+        (or a dense block). The K planner (repro.core.kslots) measures
+        THIS, so bucket choice and batch construction cannot drift."""
+        nodes = self._batch_nodes(cluster_ids, count_overflow=False)
+        sub, _ = self.graph.subgraph(nodes)
+        return normalize_csr(sub.indptr, sub.indices, sub.data,
+                             self.norm, self.diag_lambda)
+
+    def batch_from_clusters(self, cluster_ids: Sequence[int]) -> ClusterBatch:
+        nodes = self._batch_nodes(cluster_ids)
         sub, _ = self.graph.subgraph(nodes)  # re-adds Δ links among chosen
         b = len(nodes)
         cap = self.node_cap
 
         if self.sparse_adj:
             # normalize the batch CSR directly (paper §6.2) and tile it —
-            # the dense (cap, cap) block is never materialized. K is fixed
-            # at cap/B for shape stability across batches (lossless: a
-            # row-block can reference at most cap/B column-blocks).
+            # the dense (cap, cap) block is never materialized. K follows
+            # the k_slots policy: "cap" pins the lossless worst case
+            # cap/B; "auto" picks the smallest pre-planned bucket that
+            # holds this batch losslessly (repro.core.kslots); an int is
+            # used as-is (builders raise if it would drop tiles).
             from repro.kernels.ops import block_ell_adj_from_csr
             ip, ix, dt = normalize_csr(sub.indptr, sub.indices, sub.data,
                                        self.norm, self.diag_lambda)
-            k = cap // self.block_size
-            adj = block_ell_adj_from_csr(ip, ix, dt, n_cols=cap,
-                                         block=self.block_size, k_slots=k,
-                                         k_slots_t=k, n_rows=cap)
+            if self.k_slots == "auto":
+                # bucket picked inside the builder from the occupancy it
+                # computes anyway — no extra O(nnz) pass per batch
+                chooser = lambda nf, nt: \
+                    self.k_plan.bucket_for(max(nf, nt, 1))  # noqa: E731
+                adj = block_ell_adj_from_csr(ip, ix, dt, n_cols=cap,
+                                             block=self.block_size,
+                                             n_rows=cap,
+                                             assume_unique=True,
+                                             k_chooser=chooser)
+            else:
+                k = cap // self.block_size if self.k_slots == "cap" \
+                    else int(self.k_slots)
+                adj = block_ell_adj_from_csr(ip, ix, dt, n_cols=cap,
+                                             block=self.block_size,
+                                             k_slots=k, k_slots_t=k,
+                                             n_rows=cap,
+                                             assume_unique=True)
         else:
             dense = np.zeros((cap, cap), np.float32)
             row = np.repeat(np.arange(b), np.diff(sub.indptr))
@@ -167,25 +238,39 @@ class ClusterBatcher:
 
     # ------------------------------------------------------------------
     def epoch(self, epoch_idx: int) -> Iterator[ClusterBatch]:
-        """One pass over all clusters: shuffle, group into batches of q
-        clusters without replacement (Algorithm 1)."""
+        """One pass over ALL clusters: shuffle, group into batches of q
+        clusters without replacement (Algorithm 1). When q does not
+        divide num_parts the final batch carries the num_parts % q
+        trailing clusters (same padded fixed shape — dropping them would
+        silently skip those clusters every epoch)."""
         rng = np.random.default_rng((self.seed, epoch_idx))
         order = rng.permutation(self.num_parts)
         q = self.clusters_per_batch
-        for i in range(0, self.num_parts - q + 1, q):
+        for i in range(0, self.num_parts, q):
             yield self.batch_from_clusters(order[i:i + q])
 
     def steps_per_epoch(self) -> int:
-        return self.num_parts // self.clusters_per_batch
+        return -(-self.num_parts // self.clusters_per_batch)
 
     # ------------------------------------------------------------------
-    def padding_stats(self) -> dict:
+    def padding_stats(self, sample_batches: int = 4) -> dict:
+        """Padding/overflow accounting; with sparse_adj also the sampled
+        block-fill statistics (mean/p95 lossless forward and transposed
+        K, repro.core.kslots.fill_stats) and the chosen K-bucket ladder,
+        so the k_slots="auto" choice is inspectable."""
         q = self.clusters_per_batch
         avg = q * self._sizes.mean()
-        return dict(node_cap=self.node_cap, avg_batch_nodes=float(avg),
-                    pad_waste=float(1.0 - avg / self.node_cap),
-                    max_cluster=int(self._sizes.max()),
-                    min_cluster=int(self._sizes.min()))
+        stats = dict(node_cap=self.node_cap, avg_batch_nodes=float(avg),
+                     pad_waste=float(1.0 - avg / self.node_cap),
+                     max_cluster=int(self._sizes.max()),
+                     min_cluster=int(self._sizes.min()),
+                     overflow_count=int(self.overflow_count))
+        if self.sparse_adj:
+            from repro.core.kslots import fill_stats
+            stats.update(fill_stats(self, sample_batches))
+            if self.k_plan is not None:
+                stats["k_buckets"] = list(self.k_plan.buckets)
+        return stats
 
 
 def utilization_stats(graph: CSRGraph, parts: Array,

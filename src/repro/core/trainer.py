@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.batching import ClusterBatcher
 from repro.core.gcn import GCNConfig, gcn_loss, init_gcn, micro_f1
+from repro.core.prefetch import prefetch_iter
 from repro.graph.csr import CSRGraph
 from repro.graph.normalization import normalize_csr
 from repro.kernels.ops import spmm as spmm_dispatch
@@ -51,24 +52,34 @@ def make_train_step(cfg: GCNConfig, opt: Optimizer,
 
 def _dp_groups(batches, n: int):
     """Stream fixed-shape batches into groups of exactly n (one per data
-    shard), holding at most n batches plus the epoch's first n (used to
-    wrap-around-fill a short final group — duplicating a few clusters at
-    the epoch boundary keeps shapes static for jit). Never materializes
-    the whole epoch."""
-    group, first = [], []
+    shard), grouped by leaf-shape signature so fill-adaptive K buckets
+    (ClusterBatcher k_slots="auto", repro.core.kslots) never mix inside
+    one stacked step — np.stack needs uniform shapes and each bucket is
+    its own jit cache entry anyway. Holds at most n batches per bucket
+    plus each bucket's first n, which wrap-around-fill that bucket's
+    short final group (duplicating a few clusters at the epoch boundary
+    keeps shapes static for jit). Never materializes the whole epoch;
+    with a single bucket ("cap" policy or dense batches) this is exactly
+    the old single-queue behavior."""
+    pending, firsts = {}, {}
     for b in batches:
+        key = tuple(tuple(leaf.shape)
+                    for leaf in jax.tree_util.tree_leaves(b))
+        first = firsts.setdefault(key, [])
         if len(first) < n:
             first.append(b)
+        group = pending.setdefault(key, [])
         group.append(b)
         if len(group) == n:
             yield group
-            group = []
-    if group:
-        j = 0
-        while len(group) < n:
-            group.append(first[j % len(first)])
-            j += 1
-        yield group
+            pending[key] = []
+    for key, group in pending.items():      # insertion (arrival) order
+        if group:
+            first, j = firsts[key], 0
+            while len(group) < n:
+                group.append(first[j % len(first)])
+                j += 1
+            yield group
 
 
 def full_graph_logits(params, graph: CSRGraph, cfg: GCNConfig,
@@ -122,7 +133,8 @@ def train_cluster_gcn(graph: CSRGraph, batcher: ClusterBatcher,
                       verbose: bool = False,
                       mesh=None, compression=None,
                       dp_axis: str = "data",
-                      sparse_adj: bool = False) -> TrainResult:
+                      sparse_adj: bool = False,
+                      prefetch: int = 0) -> TrainResult:
     """Paper Algorithm 1. `graph` is the training graph (inductive);
     `eval_graph` (default: graph) is the full graph for evaluation.
     With `mesh=`, trains data-parallel over the mesh's `dp_axis` (one
@@ -131,9 +143,15 @@ def train_cluster_gcn(graph: CSRGraph, batcher: ClusterBatcher,
     batcher to BlockEllAdj batches, so every Â·(XW) in the step runs
     through the differentiable block-ELL spmm (Pallas kernel on TPU)
     instead of the dense XLA matmul — the loss is mathematically
-    identical (verified to 1e-4/step by tests/test_sparse_equivalence)."""
+    identical (verified to 1e-4/step by tests/test_sparse_equivalence).
+    `prefetch=N` (repro.core.prefetch) builds batches N ahead on a
+    background thread — including the DP stacking and the device_put —
+    overlapping host batch construction with the device step; batch
+    order and results are identical to the synchronous loop (0 keeps
+    the fully synchronous path)."""
     if sparse_adj and not batcher.sparse_adj:
         batcher = dataclasses.replace(batcher, sparse_adj=True)
+    transfer = jax.device_put if prefetch > 0 else None
     key = jax.random.PRNGKey(seed)
     params = init_gcn(key, cfg)
     rng = jax.random.PRNGKey(seed + 1)
@@ -156,19 +174,25 @@ def train_cluster_gcn(graph: CSRGraph, batcher: ClusterBatcher,
         losses, auxes = [], []
         if mesh is not None:
             stream = (b.astuple() for b in batcher.epoch(epoch))
-            for group in _dp_groups(stream, dsize):
-                # leaf-wise stack (adj may be a BlockEllAdj pytree)
-                stacked = jax.tree_util.tree_map(
-                    lambda *ls: np.stack(ls), *group)
+            # leaf-wise stack (adj may be a BlockEllAdj pytree); with
+            # prefetch > 0 the grouping + stacking + device_put all run
+            # on the producer thread, overlapped with the device step
+            stacked_stream = (
+                jax.tree_util.tree_map(lambda *ls: np.stack(ls), *group)
+                for group in _dp_groups(stream, dsize))
+            for stacked in prefetch_iter(stacked_stream, prefetch,
+                                         transfer=transfer):
                 rng, sub = jax.random.split(rng)
                 state, loss, aux = dist_step(state, sub, stacked)
                 losses.append(loss)
                 auxes.append(aux)
             params = state["params"]
         else:
-            for batch in batcher.epoch(epoch):
+            batch_stream = (b.astuple() for b in batcher.epoch(epoch))
+            for batch_tuple in prefetch_iter(batch_stream, prefetch,
+                                             transfer=transfer):
                 params, opt_state, rng, loss, aux = step_fn(
-                    params, opt_state, rng, batch.astuple())
+                    params, opt_state, rng, batch_tuple)
                 losses.append(loss)
                 auxes.append(aux)
         rec = {"epoch": epoch,

@@ -12,7 +12,11 @@ GCN path (shard_map): `make_gcn_train_step` runs the paper's training
 step data-parallel — each shard of the 'data' axis consumes its own
 stack of cluster batches (the block-diagonal objective of Eq. 6/7
 decomposes exactly across clusters), and gradients sync with an optional
-compressed all-reduce (repro.dist.compression).
+compressed all-reduce (repro.dist.compression). The returned step is
+shape-polymorphic over the block-ELL K of sparse batches: with
+fill-adaptive k_slots buckets (repro.core.kslots) each bucket is one
+entry in jax.jit's shape-keyed cache — at most len(buckets) compiles —
+and the trainer's DP stacker only ever groups same-bucket batches.
 """
 from __future__ import annotations
 

@@ -1,7 +1,10 @@
 from repro.kernels.ops import (spmm, spmm_dense,
                                multi_head_attention,
                                block_ell_from_dense, block_ell_from_csr,
+                               block_ell_from_csr_ref,
                                block_ell_transpose,
+                               block_ell_transpose_ref,
+                               block_ell_needed_k,
                                block_ell_adj_from_dense,
                                block_ell_adj_from_csr)
 from repro.kernels.block_spmm import BlockEllAdj, spmm_block_ell, spmm_ell

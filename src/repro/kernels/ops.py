@@ -71,12 +71,188 @@ def block_ell_from_dense(adj: np.ndarray, block: int = 128,
     return blocks, cols
 
 
+def _block_ell_from_coo(rows, cols, data, nrb: int, ncb: int, block: int,
+                        k_slots: int | None = None,
+                        dtype=np.float32,
+                        assume_unique: bool | None = None):
+    """Vectorized block-ELL assembly from COO coordinates (the
+    `block_ell_from_csr` core; `block_ell_adj_from_csr` fuses two of
+    these sharing the O(nnz) passes). Pure bincount/cumsum/scatter, no
+    Python loops over tiles and no O(nnz log nnz) sorts; duplicate
+    (row, col) entries accumulate. Slots within a row-block are ordered
+    by ascending column-block, exactly the layout the loop-based `_ref`
+    builders produce (bit-match proven by
+    tests/test_block_ell_builders.py). `assume_unique` skips the
+    duplicate-coordinate probe when the caller already knows (canonical
+    CSR has no duplicates)."""
+    B = block
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    data = np.asarray(data)
+    rb, cb, rlo, clo = _block_coords(rows, cols, B, nrb, ncb)
+    # the tile-key space is tiny (≤ (cap/B)² cells), so occupied tiles
+    # and their per-row ranks come from one O(nnz) bincount + an
+    # O(ntiles) cumsum table — NO O(nnz log nnz) sort anywhere
+    present = (np.bincount(rb.astype(np.int64, copy=False) * ncb + cb,
+                           minlength=nrb * ncb) > 0).reshape(nrb, ncb)
+    need = int(present.sum(1).max()) if present.size else 0
+    K = k_slots if k_slots is not None else max(1, need)
+    if need > K:
+        raise ValueError(
+            f"k_slots={K} drops non-zero tiles (need {need})")
+    if assume_unique is None:
+        assume_unique = not _has_duplicate_coords(rows, cols,
+                                                  np.int64(ncb) * B)
+    return _scatter_tiles(present, rb, cb, rlo, clo, data, K, B,
+                          assume_unique, dtype)
+
+
+def _scatter_tiles(present, rb, cb, rlo, clo, data, K: int, B: int,
+                   assume_unique: bool, dtype=np.float32):
+    """One block-ELL scatter direction given the (nrb, ncb) tile
+    occupancy and per-nnz block/offset coordinates. The caller has
+    already validated K against the per-row-block need."""
+    nrb, ncb = present.shape
+    cols_arr = np.zeros((nrb, K), np.int32)
+    if K == 0 or not present.any():
+        return np.zeros((nrb, K, B, B), dtype), cols_arr
+    # rank of tile (r, c) among the occupied tiles of row-block r,
+    # ordered by ascending c — the slot layout the loop-based reference
+    # produces (np.nonzero scans row-major, so no sort needed here either)
+    idt = np.int32 if nrb * K * B * B < 2**31 else np.int64
+    rank = (np.cumsum(present, axis=1) - 1).astype(idt)    # (nrb, ncb)
+    pr, pc = np.nonzero(present)
+    cols_arr[pr, rank[pr, pc]] = pc.astype(np.int32)
+    # one flat scatter: distinct coordinates map to distinct flat
+    # indices, so plain fancy assignment is exact (and ~5× cheaper than
+    # the buffered np.add.at, which is kept for the duplicate case —
+    # f32 accumulation, same bit pattern as the loop-based reference).
+    # The per-tile flat start offset is a tiny (nrb, ncb) table, so the
+    # per-nnz work is one gather + two fused multiply-adds, all int32
+    # whenever the tile array fits (always, for cluster batches).
+    tstart = (rank + np.arange(nrb, dtype=idt)[:, None] * idt(K)) \
+        * idt(B * B)
+    flat = tstart[rb, cb] + rlo.astype(idt, copy=False) * idt(B) \
+        + clo.astype(idt, copy=False)
+    blocks = np.zeros(nrb * K * B * B, dtype)
+    if assume_unique:
+        blocks[flat] = data
+    else:
+        np.add.at(blocks, flat, data)
+    return blocks.reshape(nrb, K, B, B), cols_arr
+
+
+def _block_coords(rows, cols, B: int, nrb: int, ncb: int):
+    """(rows // B, cols // B, rows % B, cols % B) in int32 when the tile
+    grid allows it (it always does for cluster batches)."""
+    idt = np.int32 if max(nrb, ncb) * B < 2**31 else np.int64
+    rows = rows.astype(idt, copy=False)
+    cols = cols.astype(idt, copy=False)
+    return rows // B, cols // B, rows % B, cols % B
+
+
+def _expand_rows(indptr):
+    """CSR row ids per nnz, int32 when the row count allows it."""
+    n = len(indptr) - 1
+    rdt = np.int32 if n < 2**31 else np.int64
+    return np.repeat(np.arange(n, dtype=rdt), np.diff(indptr))
+
+
+def _has_duplicate_coords(rows, cols, col_span) -> bool:
+    """True if any (row, col) coordinate repeats. Canonical CSR keeps
+    rows grouped and column indices sorted, so one adjacent-diff pass
+    answers it; unsorted input falls back to np.unique."""
+    if len(rows) < 2:
+        return False
+    d_r, d_c = np.diff(rows), np.diff(cols)
+    if bool(np.all((d_r > 0) | ((d_r == 0) & (d_c >= 0)))):  # CSR order
+        return bool(((d_r == 0) & (d_c == 0)).any())
+    elem = rows.astype(np.int64) * col_span + cols
+    return len(np.unique(elem)) != len(elem)
+
+
 def block_ell_from_csr(indptr, indices, data, n_cols: int, block: int = 128,
                        k_slots: int | None = None,
                        n_rows: int | None = None):
     """Block-ELL from CSR without densifying the full matrix (full-graph
     inference path). Memory ~ nnz-blocks · B². `n_rows` pads the row dim
-    beyond len(indptr)-1 (fixed-shape cluster batches)."""
+    beyond len(indptr)-1 (fixed-shape cluster batches). Vectorized
+    (argsort/bincount) — this runs per batch per epoch, so it must stay
+    off the training critical path; `block_ell_from_csr_ref` is the
+    loop-based oracle it bit-matches."""
+    n = len(indptr) - 1
+    B = block
+    nrb, ncb = -(-max(n, n_rows or 0) // B), -(-n_cols // B)
+    rows = _expand_rows(indptr)
+    return _block_ell_from_coo(rows, indices, data, nrb, ncb, B, k_slots)
+
+
+def block_ell_needed_k(indptr, indices, block: int, n_cols: int,
+                       n_rows: int | None = None) -> tuple[int, int]:
+    """(need_fwd, need_t): smallest lossless K for the forward and the
+    transposed block-ELL of this CSR pattern — computed from coordinates
+    only, no tiles built. This is what the fill-adaptive K-bucket policy
+    (repro.core.kslots) measures per batch."""
+    n = len(indptr) - 1
+    B = block
+    nrb, ncb = -(-max(n, n_rows or 0) // B), -(-n_cols // B)
+    rb = _expand_rows(indptr) // B
+    cb = np.asarray(indices) // B
+    present = (np.bincount(rb.astype(np.int64, copy=False) * ncb + cb,
+                           minlength=nrb * ncb) > 0).reshape(nrb, ncb)
+    if not present.any():
+        return 0, 0
+    return int(present.sum(1).max()), int(present.sum(0).max())
+
+
+def block_ell_transpose(blocks: np.ndarray, block_cols: np.ndarray,
+                        n_col_blocks: int, k_slots: int | None = None):
+    """Host-side transpose of a block-ELL matrix: tile (i, →c) becomes
+    tile (c, →i) transposed. All-zero tiles (ELL padding slots) are
+    skipped so padding never inflates the transposed K. Duplicate
+    (row, col) tiles accumulate — the spmm sums over slots, so this stays
+    lossless. Raises if an explicit k_slots would drop a non-zero tile.
+    Vectorized: one fused any() over tiles + a stable argsort by column
+    block; `block_ell_transpose_ref` is the loop oracle it bit-matches."""
+    blocks = np.asarray(blocks)
+    block_cols = np.asarray(block_cols)
+    nrb, K, B, _ = blocks.shape
+    ncb = n_col_blocks
+    nz = (blocks.reshape(nrb, K, -1).any(axis=-1) if blocks.size
+          else np.zeros((nrb, K), bool))
+    i_arr, k_arr = np.nonzero(nz)               # ordered by (i, k)
+    c_arr = block_cols[i_arr, k_arr].astype(np.int64)
+    counts = np.bincount(c_arr, minlength=ncb)
+    K_t = k_slots if k_slots is not None else max(1, int(counts.max())
+                                                  if counts.size else 1)
+    if len(c_arr) and int(counts.max()) > K_t:
+        raise ValueError(
+            f"k_slots={K_t} drops non-zero transposed tiles "
+            f"(need {int(counts.max())})")
+    blocks_t = np.zeros((ncb, K_t, B, B), blocks.dtype)
+    cols_t = np.zeros((ncb, K_t), np.int32)
+    if len(c_arr):
+        order = np.argsort(c_arr, kind="stable")  # keep (i, k) order per c
+        cs = c_arr[order]
+        start = np.zeros(ncb + 1, np.int64)
+        np.cumsum(counts, out=start[1:])
+        slot = np.arange(len(cs), dtype=np.int64) - start[cs]
+        blocks_t[cs, slot] = blocks[i_arr[order], k_arr[order]] \
+            .transpose(0, 2, 1)
+        cols_t[cs, slot] = i_arr[order].astype(np.int32)
+    return blocks_t, cols_t
+
+
+# ----------------------------------------------------------------------
+# loop-based reference builders — the pre-vectorization implementations,
+# kept verbatim as oracles for the bit-match property tests and the
+# batcher-throughput benchmark (bench_spmm.py). Never used on the
+# training path.
+# ----------------------------------------------------------------------
+def block_ell_from_csr_ref(indptr, indices, data, n_cols: int,
+                           block: int = 128, k_slots: int | None = None,
+                           n_rows: int | None = None):
+    """Loop-based oracle for `block_ell_from_csr` (dict/list per-tile)."""
     n = len(indptr) - 1
     B = block
     nrb, ncb = -(-max(n, n_rows or 0) // B), -(-n_cols // B)
@@ -113,13 +289,9 @@ def block_ell_from_csr(indptr, indices, data, n_cols: int, block: int = 128,
     return blocks, cols
 
 
-def block_ell_transpose(blocks: np.ndarray, block_cols: np.ndarray,
-                        n_col_blocks: int, k_slots: int | None = None):
-    """Host-side transpose of a block-ELL matrix: tile (i, →c) becomes
-    tile (c, →i) transposed. All-zero tiles (ELL padding slots) are
-    skipped so padding never inflates the transposed K. Duplicate
-    (row, col) tiles accumulate — the spmm sums over slots, so this stays
-    lossless. Raises if an explicit k_slots would drop a non-zero tile."""
+def block_ell_transpose_ref(blocks: np.ndarray, block_cols: np.ndarray,
+                            n_col_blocks: int, k_slots: int | None = None):
+    """Loop-based oracle for `block_ell_transpose` (per-tile np.any)."""
     blocks = np.asarray(blocks)
     block_cols = np.asarray(block_cols)
     nrb, K, B, _ = blocks.shape
@@ -163,14 +335,58 @@ def block_ell_adj_from_dense(adj: np.ndarray, block: int = 128,
 def block_ell_adj_from_csr(indptr, indices, data, n_cols: int,
                            block: int = 128, k_slots: int | None = None,
                            k_slots_t: int | None = None,
-                           n_rows: int | None = None) -> BlockEllAdj:
+                           n_rows: int | None = None,
+                           assume_unique: bool | None = None,
+                           k_chooser=None) -> BlockEllAdj:
     """BlockEllAdj from CSR without densifying — the ClusterBatcher
-    sparse path (normalize_csr output goes straight to tiles)."""
-    blocks, cols = block_ell_from_csr(indptr, indices, data, n_cols,
-                                      block, k_slots, n_rows=n_rows)
-    ncb = -(-n_cols // block)
-    kt = k_slots_t if k_slots_t is not None else k_slots
-    blocks_t, cols_t = block_ell_transpose(blocks, cols, ncb, kt)
+    sparse path (normalize_csr output goes straight to tiles). The
+    transpose is built DIRECTLY from the CSR coordinates (CSC = swapped
+    COO through the same vectorized assembler, which sorts by column —
+    tile (c,→i) of Âᵀ is tile (i,→c) of Â transposed), never
+    tile-by-tile from the forward tiles. `assume_unique=True` skips the
+    duplicate-coordinate probe when the caller knows the CSR is
+    canonical (everything normalize_csr emits is). `k_chooser`
+    (mutually exclusive with k_slots/k_slots_t) maps the measured
+    (need_fwd, need_t) to one K for both directions — the fill-adaptive
+    bucket policy picks its bucket HERE, from the occupancy this
+    builder computes anyway, instead of paying a separate
+    block_ell_needed_k pass per batch."""
+    n = len(indptr) - 1
+    B = block
+    nrb, ncb = -(-max(n, n_rows or 0) // B), -(-n_cols // B)
+    rows = _expand_rows(indptr)
+    cols_coo = np.asarray(indices)
+    data = np.asarray(data)
+    # everything O(nnz) is computed ONCE and shared by both scatter
+    # directions: the duplicate probe (duplicate-free input takes the
+    # fast assignment path), the block/offset coordinates (the
+    # transpose swaps them), and the tile-occupancy bincount (the
+    # transposed occupancy is its transpose)
+    uniq_coords = assume_unique if assume_unique is not None else \
+        not _has_duplicate_coords(rows, cols_coo, np.int64(ncb) * B)
+    rb, cb, rlo, clo = _block_coords(rows, cols_coo, B, nrb, ncb)
+    present = (np.bincount(rb.astype(np.int64, copy=False) * ncb + cb,
+                           minlength=nrb * ncb) > 0).reshape(nrb, ncb)
+    need_f = int(present.sum(1).max()) if present.size else 0
+    need_t = int(present.sum(0).max()) if present.size else 0
+    if k_chooser is not None:
+        if k_slots is not None or k_slots_t is not None:
+            raise ValueError("pass either k_chooser or k_slots/k_slots_t")
+        K = Kt = int(k_chooser(need_f, need_t))
+    else:
+        K = k_slots if k_slots is not None else max(1, need_f)
+        kt = k_slots_t if k_slots_t is not None else k_slots
+        Kt = kt if kt is not None else max(1, need_t)
+    if need_f > K:
+        raise ValueError(
+            f"k_slots={K} drops non-zero tiles (need {need_f})")
+    if need_t > Kt:
+        raise ValueError(
+            f"k_slots={Kt} drops non-zero tiles (need {need_t})")
+    blocks, cols = _scatter_tiles(present, rb, cb, rlo, clo, data, K, B,
+                                  uniq_coords)
+    blocks_t, cols_t = _scatter_tiles(present.T, cb, rb, clo, rlo, data,
+                                      Kt, B, uniq_coords)
     return BlockEllAdj(blocks=blocks, block_cols=cols,
                        blocks_t=blocks_t, block_cols_t=cols_t)
 

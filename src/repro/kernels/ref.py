@@ -11,13 +11,22 @@ import numpy as np
 # ----------------------------------------------------------------------
 def spmm_block_ell_ref(blocks: jnp.ndarray, block_cols: jnp.ndarray,
                        x: jnp.ndarray) -> jnp.ndarray:
-    """y[i*B:(i+1)*B] = Σ_k blocks[i,k] @ x[block_cols[i,k]*B : +B]."""
+    """y[i*B:(i+1)*B] = Σ_k blocks[i,k] @ x[block_cols[i,k]*B : +B].
+
+    The K slot sum is folded into the contraction dim — per row-block one
+    (B, K·B) @ (K·B, F) matmul instead of K tiny (B,B)@(B,F) products —
+    so the XLA CPU/GPU path runs at near-dense matmul efficiency while
+    doing only the block-sparse FLOPs (the lever that puts the fwd+bwd
+    sparse path above 1× dense in BENCH_spmm.json)."""
     nrb, K, B, _ = blocks.shape
     F = x.shape[1]
     xb = x.reshape(-1, B, F)                      # (ncb, B, F)
-    gathered = xb[block_cols]                     # (nrb, K, B, F)
-    y = jnp.einsum("rkab,rkbf->raf", blocks.astype(jnp.float32),
-                   gathered.astype(jnp.float32))
+    gathered = xb[block_cols].reshape(nrb, K * B, F)
+    a = blocks.transpose(0, 2, 1, 3).reshape(nrb, B, K * B)
+    y = jax.lax.dot_general(a.astype(jnp.float32),
+                            gathered.astype(jnp.float32),
+                            (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
     return y.reshape(nrb * B, F).astype(x.dtype)
 
 

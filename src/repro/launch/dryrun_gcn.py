@@ -16,7 +16,12 @@ Variants (the §Perf hillclimb surface for target C):
   tp     — C3: + tensor-parallel hidden (alternating col/row sharding)
   sparse — C5: Â as a BlockEllAdj (block-ELL tiles + transpose), every
            Â·(XW) fwd AND bwd through the differentiable block-ELL spmm
-           instead of a dense (cap, cap) matmul
+           instead of a dense (cap, cap) matmul. K at the lossless worst
+           case cap/B
+  sparsek— C6: the fill-adaptive K-bucket shape (repro.core.kslots):
+           same sparse step compiled at K=4 ≪ cap/B=10, the bucket a
+           clustered PPI batch actually needs — the per-step FLOP and
+           tile-memory saving of ISSUE 3 measured on the production mesh
 """
 import argparse
 import dataclasses
@@ -63,15 +68,18 @@ def build(variant: str, mesh):
 
     # batch specs: stacked over the data axis
     sd = jax.ShapeDtypeStruct
-    if variant == "sparse":
-        # block-ELL Â at the shape the batcher emits: K = cap/B (lossless
-        # worst case; real fill is what bench_spmm measures)
+    if variant in ("sparse", "sparsek"):
+        # block-ELL Â at the shape the batcher emits: K = cap/B for
+        # "sparse" (lossless worst case), K = 4 for "sparsek" (the
+        # fill-adaptive bucket a clustered batch actually needs —
+        # ClusterBatcher(k_slots="auto") emits these shapes)
         nrb = cap // 128
+        K = 4 if variant == "sparsek" else nrb
         adj_spec = BlockEllAdj(
-            blocks=sd((G, nrb, nrb, 128, 128), dt),
-            block_cols=sd((G, nrb, nrb), jnp.int32),
-            blocks_t=sd((G, nrb, nrb, 128, 128), dt),
-            block_cols_t=sd((G, nrb, nrb), jnp.int32))
+            blocks=sd((G, nrb, K, 128, 128), dt),
+            block_cols=sd((G, nrb, K), jnp.int32),
+            blocks_t=sd((G, nrb, K, 128, 128), dt),
+            block_cols_t=sd((G, nrb, K), jnp.int32))
     else:
         adj_spec = sd((G, cap, cap), dt)
     batch = (
@@ -174,10 +182,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--variant", default="all",
                     choices=("base", "bf16", "ax", "tp", "q4", "sparse",
-                             "all"))
+                             "sparsek", "all"))
     ap.add_argument("--multipod", action="store_true")
     args = ap.parse_args()
-    variants = ("base", "bf16", "ax", "tp", "q4", "sparse") \
+    variants = ("base", "bf16", "ax", "tp", "q4", "sparse", "sparsek") \
         if args.variant == "all" else (args.variant,)
     for v in variants:
         r = run(v, args.multipod)

@@ -1,0 +1,152 @@
+"""Fill-adaptive K buckets (repro.core.kslots) + ClusterBatcher epoch /
+overflow fixes: bucketed-K training must match lossless cap-K training
+step for step, the bucket ladder must be small and end at the lossless
+cap, trailing partial batches must be emitted, and overflow must be
+loud."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClusterBatcher, GCNConfig, init_gcn,
+                        make_train_step, plan_k_buckets)
+from repro.core.kslots import pow2_ceil
+from repro.graph import make_dataset, partition_graph
+from repro.nn import adamw
+
+
+def _setup(seed=0):
+    g = make_dataset("reddit", scale=0.02, seed=seed)
+    parts, _ = partition_graph(g, 5, method="metis", seed=seed)
+    cfg = GCNConfig(in_dim=g.features.shape[1], hidden_dim=32,
+                    out_dim=int(g.labels.max()) + 1, num_layers=2,
+                    dropout=0.0)
+    return g, parts, cfg
+
+
+def test_pow2_ceil():
+    assert [pow2_ceil(v) for v in (0, 1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 1, 2, 4, 4, 8, 8, 16]
+
+
+def test_bucket_ladder_shape_and_fallback():
+    g, parts, _ = _setup()
+    b = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0,
+                       sparse_adj=True, k_slots="auto")
+    plan = b.k_plan
+    cap_k = b.node_cap // b.block_size
+    assert plan.buckets[-1] == cap_k                     # lossless fallback
+    assert list(plan.buckets) == sorted(set(plan.buckets))
+    for bk in plan.buckets[:-1]:
+        assert bk == pow2_ceil(bk)                       # pow2 ladder
+    assert plan.bucket_for(1) == plan.buckets[0]
+    assert plan.bucket_for(cap_k) == cap_k
+    # plan_k_buckets is deterministic for a given batcher
+    assert plan_k_buckets(b).buckets == plan.buckets
+
+
+def test_bucketed_batches_are_lossless_and_few_shapes():
+    from repro.kernels.ref import dense_from_block_ell
+    g, parts, _ = _setup()
+    b_cap = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0,
+                           sparse_adj=True)
+    b_auto = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0,
+                            sparse_adj=True, k_slots="auto")
+    cap_k = b_cap.node_cap // b_cap.block_size
+    ks = set()
+    for bc, ba in zip(b_cap.epoch(0), b_auto.epoch(0)):
+        k = ba.adj.blocks.shape[1]
+        ks.add(k)
+        assert k <= cap_k
+        dc = dense_from_block_ell(np.asarray(bc.adj.blocks),
+                                  np.asarray(bc.adj.block_cols),
+                                  b_cap.node_cap)
+        da = dense_from_block_ell(np.asarray(ba.adj.blocks),
+                                  np.asarray(ba.adj.block_cols),
+                                  b_auto.node_cap)
+        np.testing.assert_array_equal(dc, da)            # lossless
+        dt = dense_from_block_ell(np.asarray(ba.adj.blocks_t),
+                                  np.asarray(ba.adj.block_cols_t),
+                                  b_auto.node_cap)
+        np.testing.assert_allclose(dt, da.T, atol=1e-6)
+    assert ks <= set(b_auto.k_plan.buckets)              # ≤ |ladder| shapes
+
+
+def test_bucketed_training_matches_lossless_within_1e5():
+    """10 real optimizer steps over the identical batch stream: the
+    bucketed-K path drifts < 1e-5/step from the lossless cap-K path
+    (same matrix, less padding — only summation-order effects)."""
+    g, parts, cfg = _setup(seed=1)
+    opt = adamw(1e-2)
+    b_cap = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0,
+                           sparse_adj=True)
+    b_auto = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0,
+                            sparse_adj=True, k_slots="auto")
+    key = jax.random.PRNGKey(0)
+    p_cap = init_gcn(key, cfg)
+    p_auto = jax.tree_util.tree_map(jnp.copy, p_cap)
+    step = make_train_step(cfg, opt)
+    s_cap, s_auto = opt.init(p_cap), opt.init(p_auto)
+    r_cap = r_auto = jax.random.PRNGKey(1)
+    done, epoch = 0, 0
+    while done < 10:
+        for bc, ba in zip(b_cap.epoch(epoch), b_auto.epoch(epoch)):
+            p_cap, s_cap, r_cap, l_cap, _ = step(p_cap, s_cap, r_cap,
+                                                 bc.astuple())
+            p_auto, s_auto, r_auto, l_auto, _ = step(p_auto, s_auto,
+                                                     r_auto, ba.astuple())
+            assert abs(float(l_cap) - float(l_auto)) < 1e-5, done
+            done += 1
+            if done == 10:
+                break
+        epoch += 1
+
+
+def test_epoch_emits_trailing_partial_batch():
+    """num_parts % q clusters must not be silently dropped (old bug):
+    5 parts at q=2 -> 3 batches covering every cluster exactly once."""
+    g, parts, _ = _setup()
+    b = ClusterBatcher(g, parts, clusters_per_batch=2, seed=0)
+    batches = list(b.epoch(0))
+    assert len(batches) == 3
+    assert b.steps_per_epoch() == 3
+    assert sum(int(bt.num_real) for bt in batches) == g.num_nodes
+    # shapes stay fixed (the partial batch pads like every other)
+    assert len({bt.adj.shape for bt in batches}) == 1
+
+
+def test_overflow_warns_once_and_is_counted():
+    g, parts, _ = _setup()
+    b = ClusterBatcher(g, parts, clusters_per_batch=5, seed=0,
+                       node_cap=128, pad_multiple=128)
+    with pytest.warns(UserWarning, match="overflow"):
+        b.batch_from_clusters(list(range(5)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")                   # second: silent
+        b.batch_from_clusters(list(range(5)))
+    stats = b.padding_stats()
+    assert stats["overflow_count"] > 0
+
+
+def test_padding_stats_gains_block_fill_statistics():
+    g, parts, _ = _setup()
+    b = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0,
+                       sparse_adj=True, k_slots="auto")
+    stats = b.padding_stats()
+    for key in ("cap_k", "k_fwd_mean", "k_fwd_p95", "k_t_mean", "k_t_p95",
+                "k_buckets", "overflow_count"):
+        assert key in stats, key
+    assert 0 < stats["k_fwd_mean"] <= stats["cap_k"]
+    assert stats["k_fwd_p95"] <= stats["cap_k"]
+    assert stats["k_buckets"][-1] == stats["cap_k"]
+    # dense batcher keeps the slim dict (no sampling cost)
+    d = ClusterBatcher(g, parts, clusters_per_batch=1, seed=0)
+    assert "k_fwd_mean" not in d.padding_stats()
+
+
+def test_invalid_k_slots_policy_raises():
+    g, parts, _ = _setup()
+    with pytest.raises(ValueError, match="k_slots"):
+        ClusterBatcher(g, parts, sparse_adj=True, k_slots="bogus")
