@@ -1,20 +1,22 @@
-"""End-to-end driver: train a deep (5-layer, wide-hidden) Cluster-GCN on
-a PPI-like multi-label graph for a few hundred steps — the paper's
-SOTA-recipe (§4.3: deep GCN + diagonal enhancement Eq. 11) with the full
-production runtime: checkpointing, preemption handling, restart.
+"""End-to-end driver: the paper's §4.3 SOTA recipe (deep GCN + Eq. 11
+diagonal enhancement) as a declarative ExperimentSpec, with the full
+production runtime — periodic eval, checkpointing, preemption-triggered
+save, and `--resume` — all coming from the Engine, not from this script.
 
     PYTHONPATH=src python examples/train_clustergcn.py \
-        [--epochs 30] [--scale 0.3] [--ckpt /tmp/clustergcn_ckpt]
+        [--epochs 30] [--scale 0.3] [--ckpt /tmp/clustergcn_ckpt] \
+        [--sparse] [--resume] [--set section.field=value ...]
+
+This and `python -m repro.launch.run_experiment` are the two
+user-facing drivers; anything configurable here is a `--set` override
+away (see repro.core.experiment for the schema).
 """
 import argparse
 import json
 
-import numpy as np
-
-from repro.core import ClusterBatcher, GCNConfig, train_cluster_gcn, evaluate
-from repro.graph import make_dataset, partition_graph
-from repro.nn import adamw
-from repro.runtime import CheckpointManager, PreemptionHandler
+from repro.core import build_experiment, evaluate, preset
+from repro.core.engine import resolve_eval_mask
+from repro.core.experiment import apply_overrides, parse_set_items
 
 
 def main():
@@ -22,49 +24,49 @@ def main():
     ap.add_argument("--epochs", type=int, default=30)
     ap.add_argument("--scale", type=float, default=0.3)
     ap.add_argument("--hidden", type=int, default=256)
-    ap.add_argument("--layers", type=int, default=5)
-    ap.add_argument("--partitions", type=int, default=50)
-    ap.add_argument("--clusters-per-batch", type=int, default=1)
-    ap.add_argument("--diag-lambda", type=float, default=1.0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true")
     ap.add_argument("--sparse", action="store_true",
                     help="block-ELL Â batches + differentiable Pallas "
                          "spmm instead of the dense XLA matmul")
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--set", action="append", metavar="PATH=VALUE",
+                    default=[], help="extra spec overrides")
     args = ap.parse_args()
 
-    g = make_dataset("ppi", scale=args.scale, seed=0)
-    print(f"[data] ppi-like: {g.num_nodes} nodes, {g.num_edges // 2} edges, "
-          f"{g.labels.shape[1]} labels")
-    parts, stats = partition_graph(g, args.partitions, method="metis")
-    print(f"[partition] within-cluster edges: {stats.within_fraction:.1%}, "
-          f"imbalance {stats.imbalance:.2f}, {stats.seconds:.1f}s "
-          f"(paper Table 13 point)")
+    spec = preset("ppi_sota")
+    apply_overrides(spec, {
+        "data.scale": args.scale,
+        "model.hidden_dim": args.hidden,
+        "run.epochs": args.epochs,
+        "run.eval_every": 5,
+        "run.verbose": True,
+        "run.checkpoint_dir": args.ckpt,
+        "batch.sparse_adj": args.sparse,
+    })
+    apply_overrides(spec, parse_set_items(args.set))
 
-    # paper §4.3: deep GCN needs Eq. 11 diagonal enhancement to converge
-    cfg = GCNConfig(in_dim=g.features.shape[1], hidden_dim=args.hidden,
-                    out_dim=g.labels.shape[1], num_layers=args.layers,
-                    dropout=0.1, multilabel=True)
-    batcher = ClusterBatcher(g, parts,
-                             clusters_per_batch=args.clusters_per_batch,
-                             norm="eq11", diag_lambda=args.diag_lambda,
-                             seed=0)
-    steps = batcher.steps_per_epoch() * args.epochs
-    print(f"[train] {args.layers}-layer hidden={args.hidden}, "
-          f"{batcher.steps_per_epoch()} steps/epoch × {args.epochs} epochs "
-          f"= {steps} steps")
+    exp = build_experiment(spec)
+    g = exp.graph
+    print(f"[data] ppi-like: {g.num_nodes} nodes, {g.num_edges // 2} "
+          f"edges, {g.labels.shape[1]} labels")
+    print(f"[partition] within-cluster edges: "
+          f"{exp.partition_stats.within_fraction:.1%}, imbalance "
+          f"{exp.partition_stats.imbalance:.2f} (paper Table 13 point)")
+    steps = exp.batcher.steps_per_epoch() * spec.run.epochs
+    print(f"[train] {spec.model.num_layers}-layer "
+          f"hidden={spec.model.hidden_dim}, "
+          f"{exp.batcher.steps_per_epoch()} steps/epoch × "
+          f"{spec.run.epochs} epochs = {steps} steps")
 
-    ckpt = CheckpointManager(args.ckpt) if args.ckpt else None
-    with PreemptionHandler() as pre:
-        result = train_cluster_gcn(g, batcher, cfg, adamw(1e-2),
-                                   num_epochs=args.epochs, eval_every=5,
-                                   verbose=True, sparse_adj=args.sparse)
-        if ckpt:
-            ckpt.save(steps, result.params, blocking=True)
-    test_f1 = evaluate(result.params, g, cfg, g.test_mask, "eq11",
-                       args.diag_lambda)
+    result = exp.fit(resume=args.resume)
+
+    _, test_mask = resolve_eval_mask(g, "test")
+    test_f1 = evaluate(result.params, g, exp.cfg, test_mask,
+                       spec.batch.norm, spec.batch.diag_lambda)
     print(json.dumps({"test_micro_f1": round(test_f1, 4),
                       "train_seconds": round(result.seconds, 1),
-                      "steps": steps}))
+                      "epochs_run": len(result.history),
+                      "preempted": exp.engine.preempted}))
 
 
 if __name__ == "__main__":

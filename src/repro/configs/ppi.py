@@ -1,5 +1,10 @@
-"""Paper dataset configs (Table 4): partitions, clusters-per-batch,
-hidden size per dataset — plus the §4.3 SOTA deep recipe."""
+"""Paper dataset config for PPI (Table 4): partitions, clusters-per-
+batch, hidden size — plus the §4.3 SOTA deep recipe — exposed both as
+constants and as runnable ExperimentSpec presets (registered in
+repro.core.experiment as "ppi" / "ppi_sota" / "ppi_tiny")."""
+from repro.core.experiment import (BatchSpec, DataSpec, ExperimentSpec,
+                                   ModelSpec, OptimSpec, PartitionSpec,
+                                   RunSpec)
 from repro.core.gcn import GCNConfig
 
 # paper Table 4 hyper-parameters
@@ -13,6 +18,52 @@ SOTA = dict(num_layers=5, hidden=2048, norm="eq11", diag_lambda=1.0,
 
 
 def gcn_config(in_dim: int, out_dim: int, num_layers: int = 3,
-               hidden: int = HIDDEN) -> GCNConfig:
+               hidden: int = HIDDEN,
+               multilabel: bool = True) -> GCNConfig:
+    """PPI is multi-label (sigmoid BCE) so that's the default here, but
+    it is a parameter — reusing this helper for a multiclass dataset no
+    longer silently trains the wrong loss (the preset registry sets it
+    per dataset; build_gcn_config infers it from the labels)."""
     return GCNConfig(in_dim=in_dim, hidden_dim=hidden, out_dim=out_dim,
-                     num_layers=num_layers, dropout=0.2, multilabel=True)
+                     num_layers=num_layers, dropout=0.2,
+                     multilabel=multilabel)
+
+
+def spec() -> ExperimentSpec:
+    """Table 4 PPI recipe on the PPI-like generator."""
+    return ExperimentSpec(
+        name="ppi",
+        data=DataSpec(name="ppi", scale=1.0, seed=0),
+        partition=PartitionSpec(num_parts=PARTITIONS, method="metis"),
+        batch=BatchSpec(clusters_per_batch=CLUSTERS_PER_BATCH,
+                        norm="eq10"),
+        model=ModelSpec(hidden_dim=HIDDEN, num_layers=3, dropout=0.2,
+                        multilabel=True),
+        optim=OptimSpec(name="adamw", lr=1e-2),
+        run=RunSpec(epochs=200, eval_every=10, eval_split="val"))
+
+
+def sota_spec() -> ExperimentSpec:
+    """§4.3 SOTA: 5-layer 2048-hidden deep GCN with Eq. 11 diagonal
+    enhancement (the recipe that needs diag_lambda to converge)."""
+    s = spec()
+    s.name = "ppi_sota"
+    s.batch.norm = SOTA["norm"]
+    s.batch.diag_lambda = SOTA["diag_lambda"]
+    s.model.num_layers = SOTA["num_layers"]
+    s.model.hidden_dim = SOTA["hidden"]
+    s.model.dropout = SOTA["dropout"]
+    return s
+
+
+def tiny_spec() -> ExperimentSpec:
+    """CPU-smoke-sized PPI: same shape of recipe, ~400 nodes."""
+    s = spec()
+    s.name = "ppi_tiny"
+    s.data.scale = 0.03
+    s.partition.num_parts = 8
+    s.batch.clusters_per_batch = 2
+    s.model.hidden_dim = 64
+    s.run.epochs = 5
+    s.run.eval_every = 1
+    return s

@@ -4,8 +4,18 @@ from repro.core.batching import (ClusterBatch, ClusterBatcher,
 from repro.core.kslots import KSlotsPlan, plan_k_buckets, fill_stats
 from repro.core.prefetch import prefetch_iter
 from repro.core.gcn import GCNConfig, init_gcn, gcn_forward, gcn_loss, micro_f1
+from repro.core.engine import (Engine, StepBackend, SingleDeviceBackend,
+                               ShardMapBackend, EvalHook, CheckpointHook,
+                               LoggingHook, PreemptionHook, StopAtStepHook,
+                               resolve_eval_mask)
 from repro.core.trainer import (train_cluster_gcn, make_train_step, evaluate,
                                 full_graph_logits, TrainResult)
+from repro.core.experiment import (ExperimentSpec, DataSpec, PartitionSpec,
+                                   BatchSpec, ModelSpec, OptimSpec,
+                                   ExecutionSpec, RunSpec, Experiment,
+                                   build_experiment, run_experiment,
+                                   apply_overrides, set_override,
+                                   preset, register_preset, list_presets)
 from repro.core.baselines import (train_full_batch, train_expansion_sgd,
                                   train_sage, train_vrgcn, lhop_closure,
                                   expansion_stats)

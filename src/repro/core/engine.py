@@ -1,0 +1,504 @@
+"""Step-driven training engine: ONE epoch loop over a StepBackend.
+
+Before this module, `core.trainer.train_cluster_gcn` carried two inline
+epoch loops (single-device jit and shard_map data-parallel) and the
+fault-tolerance subsystems (runtime.CheckpointManager, PreemptionHandler)
+sat outside them. The Engine inverts that:
+
+* `StepBackend` — the protocol one training step implements.
+  `SingleDeviceBackend` wraps the jit'd per-batch step;
+  `ShardMapBackend` wraps `dist.steps.make_gcn_train_step` plus the
+  `_dp_groups` stacking that feeds one cluster batch per data shard.
+  Both own their RNG threading, so the Engine's loop is backend-agnostic
+  and trajectories are bitwise-identical to the old inline loops.
+* Hooks — objects with any of `on_fit_start/on_step/on_epoch/on_eval/
+  on_fit_end`, fired by the Engine. Periodic eval (EvalHook), checkpoint
+  cadence (CheckpointHook), metric logging (LoggingHook) and
+  preemption-triggered save (PreemptionHook: SIGTERM → checkpoint →
+  clean exit) all run through this seam instead of inline `if`s.
+* Resume — `Engine.fit(resume=True)` restores the latest checkpoint
+  (params/opt/RNG state tree + JSON metadata carrying epoch,
+  step-in-epoch, partial-epoch loss/aux accumulators and history) and
+  fast-forwards the batch stream to the exact position, so a killed run
+  continues on the exact trajectory of an unkilled one — mid-epoch
+  included. Batch order needs no stored state: ClusterBatcher reseeds
+  per (seed, epoch), so skipping the first k payloads of epoch e
+  reproduces the tail exactly.
+
+`core.trainer.train_cluster_gcn` is now a thin wrapper over this class;
+`core.experiment.build_experiment` builds one from a declarative
+ExperimentSpec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Protocol,
+                    Sequence, Tuple, runtime_checkable)
+
+import jax
+import numpy as np
+
+from repro.core.batching import ClusterBatcher
+from repro.core.gcn import GCNConfig, gcn_loss, init_gcn, micro_f1
+from repro.core.prefetch import prefetch_iter
+from repro.kernels.ops import spmm as spmm_dispatch
+from repro.nn.optim import Optimizer, apply_updates
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainResult:
+    history: List[Dict[str, float]]
+    params: Any
+    seconds: float
+
+
+def make_train_step(cfg: GCNConfig, opt: Optimizer,
+                    spmm: Callable = spmm_dispatch):
+    def step(params, opt_state, rng, batch_tuple):
+        rng, sub = jax.random.split(rng)
+        (loss, aux), grads = jax.value_and_grad(gcn_loss, has_aux=True)(
+            params, batch_tuple, cfg, train=True, rng=sub, spmm=spmm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, rng, loss, aux
+    return jax.jit(step, donate_argnums=(0, 1))
+
+
+def _dp_groups(batches, n: int):
+    """Stream fixed-shape batches into groups of exactly n (one per data
+    shard), grouped by leaf-shape signature so fill-adaptive K buckets
+    (ClusterBatcher k_slots="auto", repro.core.kslots) never mix inside
+    one stacked step — np.stack needs uniform shapes and each bucket is
+    its own jit cache entry anyway. Holds at most n batches per bucket
+    plus each bucket's first n, which wrap-around-fill that bucket's
+    short final group (duplicating a few clusters at the epoch boundary
+    keeps shapes static for jit). Never materializes the whole epoch;
+    with a single bucket ("cap" policy or dense batches) this is exactly
+    the old single-queue behavior."""
+    pending, firsts = {}, {}
+    for b in batches:
+        key = tuple(tuple(leaf.shape)
+                    for leaf in jax.tree_util.tree_leaves(b))
+        first = firsts.setdefault(key, [])
+        if len(first) < n:
+            first.append(b)
+        group = pending.setdefault(key, [])
+        group.append(b)
+        if len(group) == n:
+            yield group
+            pending[key] = []
+    for key, group in pending.items():      # insertion (arrival) order
+        if group:
+            first, j = firsts[key], 0
+            while len(group) < n:
+                group.append(first[j % len(first)])
+                j += 1
+            yield group
+
+
+# ----------------------------------------------------------------------
+# step backends
+# ----------------------------------------------------------------------
+@runtime_checkable
+class StepBackend(Protocol):
+    """One training step, including its RNG threading and any payload
+    reshaping (stacking) the step function needs.
+
+    state is an arbitrary checkpointable pytree; `stream` turns the
+    batcher's per-batch tuples into the payloads `step` consumes (the
+    identity for a single device; grouping + leaf-stacking for DP).
+    """
+
+    def init(self, params: PyTree, rng: jax.Array) -> PyTree: ...
+
+    def stream(self, batches: Iterator) -> Iterator: ...
+
+    def step(self, state: PyTree, payload) -> Tuple[PyTree, Any, Dict]: ...
+
+    def params(self, state: PyTree) -> PyTree: ...
+
+
+class SingleDeviceBackend:
+    """The plain jit'd per-batch step (rng split inside the jit, exactly
+    the pre-Engine single-device loop)."""
+
+    def __init__(self, cfg: GCNConfig, opt: Optimizer,
+                 spmm: Callable = spmm_dispatch):
+        self.opt = opt
+        self._step = make_train_step(cfg, opt, spmm)
+
+    def init(self, params, rng):
+        return {"params": params, "opt": self.opt.init(params), "rng": rng}
+
+    def stream(self, batches):
+        return batches
+
+    def step(self, state, payload):
+        params, opt_state, rng, loss, aux = self._step(
+            state["params"], state["opt"], state["rng"], payload)
+        return {"params": params, "opt": opt_state, "rng": rng}, loss, aux
+
+    def params(self, state):
+        return state["params"]
+
+
+class ShardMapBackend:
+    """Data-parallel shard_map step (dist.steps.make_gcn_train_step):
+    `stream` groups same-shape batches into stacks of one-per-data-shard
+    (so fill-adaptive K buckets never mix), `step` splits the rng on the
+    host and feeds the stacked payload — exactly the pre-Engine DP loop.
+    """
+
+    def __init__(self, cfg: GCNConfig, opt: Optimizer, mesh, *,
+                 dp_axis: str = "data", compression=None,
+                 spmm: Callable = spmm_dispatch):
+        from repro.dist.steps import (init_gcn_train_state,
+                                      make_gcn_train_step)
+        self.opt = opt
+        self.compression = compression
+        self.dsize = int(mesh.shape[dp_axis])
+        self._init_state = init_gcn_train_state
+        self._step = make_gcn_train_step(cfg, opt, mesh, axis_name=dp_axis,
+                                         compression=compression, spmm=spmm)
+
+    def init(self, params, rng):
+        return {"dist": self._init_state(params, self.opt, self.dsize,
+                                         self.compression),
+                "rng": rng}
+
+    def stream(self, batches):
+        # leaf-wise stack (adj may be a BlockEllAdj pytree); under
+        # prefetch the grouping + stacking runs on the producer thread,
+        # overlapped with the device step
+        return (jax.tree_util.tree_map(lambda *ls: np.stack(ls), *group)
+                for group in _dp_groups(batches, self.dsize))
+
+    def step(self, state, payload):
+        rng, sub = jax.random.split(state["rng"])
+        dist, loss, aux = self._step(state["dist"], sub, payload)
+        return {"dist": dist, "rng": rng}, loss, aux
+
+    def params(self, state):
+        return state["dist"]["params"]
+
+
+# ----------------------------------------------------------------------
+# hooks
+# ----------------------------------------------------------------------
+_EVAL_SPLITS = ("auto", "train", "val", "test")
+
+
+def resolve_eval_mask(graph, split: str,
+                      warner: Optional[Callable[[str], None]] = None
+                      ) -> Tuple[str, np.ndarray]:
+    """Map an eval-split name to (resolved_name, mask). split="auto"
+    keeps the historical behavior — val_mask unless it is missing/empty,
+    then test_mask — but `warner` is called on that fallback so silent
+    test-set evaluation during training is at least loud."""
+    if split not in _EVAL_SPLITS:
+        raise ValueError(f"eval_split must be one of {_EVAL_SPLITS}; "
+                         f"got {split!r}")
+    if split == "auto":
+        if graph.val_mask is not None and graph.val_mask.any():
+            return "val", graph.val_mask
+        if warner is not None:
+            warner("eval_split='auto' fell back to the TEST split "
+                   "(val_mask is missing or empty) — validation scores "
+                   "are test-set scores; set run.eval_split explicitly")
+        return "test", graph.test_mask
+    mask = getattr(graph, f"{split}_mask")
+    if mask is None or not mask.any():
+        raise ValueError(
+            f"eval_split={split!r} but the graph's {split}_mask is "
+            f"{'missing' if mask is None else 'empty'} — evaluating on "
+            f"it would produce NaN scores; pick a split with nodes "
+            f"(or 'auto' for the warn-on-fallback behavior)")
+    return split, mask
+
+
+class EvalHook:
+    """Periodic full-graph evaluation. Mutates the (shared) epoch record
+    in place — the Engine appends the record to history before firing
+    on_epoch hooks, so `val_score`/`eval_split` land in history and in
+    any checkpoint metadata written by later hooks."""
+
+    def __init__(self, eval_graph, cfg: GCNConfig, *, every: int,
+                 split: str = "auto", norm: str = "eq10",
+                 diag_lambda: float = 0.0):
+        if split not in _EVAL_SPLITS:
+            raise ValueError(f"eval_split must be one of {_EVAL_SPLITS}; "
+                             f"got {split!r}")
+        if split != "auto":
+            resolve_eval_mask(eval_graph, split)   # fail at build time,
+            # not epochs into training, when the explicit mask is empty
+        self.graph, self.cfg, self.every, self.split = \
+            eval_graph, cfg, every, split
+        self.norm, self.diag_lambda = norm, diag_lambda
+        self._warned = False
+
+    def _warn_once(self, msg: str):
+        if not self._warned:
+            self._warned = True
+            warnings.warn(msg, stacklevel=4)
+
+    def on_epoch(self, engine: "Engine", rec: Dict) -> None:
+        if not self.every or (rec["epoch"] + 1) % self.every:
+            return
+        from repro.core.trainer import evaluate
+        split, mask = resolve_eval_mask(self.graph, self.split,
+                                        self._warn_once)
+        rec["val_score"] = evaluate(engine.backend.params(engine.state),
+                                    self.graph, self.cfg, mask,
+                                    self.norm, self.diag_lambda)
+        rec["eval_split"] = split
+        for h in engine.hooks:
+            fn = getattr(h, "on_eval", None)
+            if fn is not None:
+                fn(engine, rec)
+
+
+class CheckpointHook:
+    """Epoch-cadence checkpointing through the engine's manager.
+    Cadence saves are async (CheckpointManager snapshots to host, then
+    writes on a background thread, overlapped with the next epoch);
+    only the preemption-path save is blocking."""
+
+    def __init__(self, every: int = 1):
+        self.every = max(1, int(every))
+
+    def on_epoch(self, engine: "Engine", rec: Dict) -> None:
+        if (rec["epoch"] + 1) % self.every == 0:
+            engine.save_checkpoint(blocking=False)
+
+    def on_fit_end(self, engine: "Engine") -> None:
+        if engine.checkpoint is not None:
+            engine.checkpoint.wait()
+
+
+class LoggingHook:
+    """The old verbose=True per-epoch print."""
+
+    def on_epoch(self, engine: "Engine", rec: Dict) -> None:
+        print({k: (round(v, 4) if isinstance(v, float) else v)
+               for k, v in rec.items()})
+
+
+class PreemptionHook:
+    """SIGTERM/SIGINT → finish the in-flight step, blocking checkpoint,
+    clean exit (Engine.fit returns the partial TrainResult and sets
+    engine.preempted). Wraps runtime.resilience.PreemptionHandler —
+    signal handlers are installed only for the duration of fit()."""
+
+    def __init__(self, handler=None):
+        if handler is None:
+            from repro.runtime.resilience import PreemptionHandler
+            handler = PreemptionHandler()
+        self.handler = handler
+
+    def on_fit_start(self, engine: "Engine") -> None:
+        self.handler.__enter__()
+
+    def on_step(self, engine: "Engine", info: Dict) -> None:
+        if self.handler.should_stop:
+            engine.request_stop(reason="preempted")
+
+    def on_fit_end(self, engine: "Engine") -> None:
+        self.handler.__exit__(None, None, None)
+
+
+class StopAtStepHook:
+    """Test/ops helper: request a clean stop (checkpoint + exit) after
+    `global_step` reaches `stop_after` steps — a deterministic stand-in
+    for a mid-run kill."""
+
+    def __init__(self, stop_after: int):
+        self.stop_after = int(stop_after)
+
+    def on_step(self, engine: "Engine", info: Dict) -> None:
+        if info["global_step"] >= self.stop_after:
+            engine.request_stop(reason=f"stop_at_step {self.stop_after}")
+
+
+# ----------------------------------------------------------------------
+# the engine
+# ----------------------------------------------------------------------
+class Engine:
+    """ONE loop over `backend.step`, from cold start or checkpoint.
+
+    fit(resume=True) restores the newest checkpoint in `checkpoint` (a
+    runtime.CheckpointManager) and fast-forwards epoch / step-in-epoch /
+    partial loss accumulators so the trajectory continues exactly where
+    the saved run stopped; with no checkpoint on disk it cold-starts.
+    """
+
+    def __init__(self, batcher: ClusterBatcher, cfg: GCNConfig,
+                 backend: StepBackend, *, epochs: int, seed: int = 0,
+                 prefetch: int = 0, hooks: Sequence = (),
+                 checkpoint=None):
+        self.batcher = batcher
+        self.cfg = cfg
+        self.backend = backend
+        self.epochs = int(epochs)
+        self.seed = int(seed)
+        self.prefetch = int(prefetch)
+        self.hooks = list(hooks)
+        self.checkpoint = checkpoint
+        self.state: Optional[PyTree] = None
+        self.history: List[Dict[str, float]] = []
+        self.global_step = 0
+        self.preempted = False
+        self.stop_reason: Optional[str] = None
+        self._stop = False
+        # current resume point: (epoch, step_in_epoch, losses, auxes)
+        self._position: Tuple[int, int, list, list] = (0, 0, [], [])
+
+    # -- state ----------------------------------------------------------
+    def init_state(self) -> PyTree:
+        params = init_gcn(jax.random.PRNGKey(self.seed), self.cfg)
+        return self.backend.init(params, jax.random.PRNGKey(self.seed + 1))
+
+    def request_stop(self, reason: str = "requested") -> None:
+        if not self._stop:
+            self._stop = True
+            self.stop_reason = reason
+
+    # -- checkpointing --------------------------------------------------
+    def save_checkpoint(self, blocking: bool = True) -> None:
+        """Persist state + loop position. Loss/aux accumulators are
+        host floats in the metadata — float() of an f32 scalar is exact,
+        so the post-resume epoch record is bit-identical to an unkilled
+        run's."""
+        if self.checkpoint is None or self.state is None:
+            return
+        epoch, step_in_epoch, losses, auxes = self._position
+        meta = {
+            "epoch": epoch, "step_in_epoch": step_in_epoch,
+            "global_step": self.global_step,
+            "losses": [float(l) for l in losses],
+            "auxes": [{k: float(v) for k, v in a.items()} for a in auxes],
+            # snapshot: an async save json-dumps on the writer thread
+            # while the loop keeps appending to self.history
+            "history": [dict(h) for h in self.history],
+        }
+        self.checkpoint.save(self.global_step, self.state,
+                             blocking=blocking, metadata=meta)
+
+    def _try_restore(self) -> bool:
+        if self.checkpoint is None:
+            return False
+        step = self.checkpoint.latest_step()
+        if step is None:
+            return False
+        template = self.init_state()
+        self.state = self.checkpoint.restore(template, step=step)
+        meta = self.checkpoint.read_metadata(step)
+        if "history" not in meta:
+            raise ValueError(
+                f"checkpoint step {step} in {self.checkpoint.directory} "
+                f"carries no Engine resume metadata (it was saved by a "
+                f"direct CheckpointManager.save, not Engine.fit) — "
+                f"restore it manually or start without resume=True")
+        self.history = list(meta["history"])
+        self.global_step = int(meta["global_step"])
+        self._position = (int(meta["epoch"]), int(meta["step_in_epoch"]),
+                          list(meta["losses"]),
+                          [dict(a) for a in meta["auxes"]])
+        return True
+
+    # -- hook plumbing --------------------------------------------------
+    def _fire(self, name: str, *args) -> None:
+        for h in self.hooks:
+            fn = getattr(h, name, None)
+            if fn is not None:
+                fn(self, *args)
+
+    # -- the loop -------------------------------------------------------
+    def fit(self, resume: bool = False) -> TrainResult:
+        restored = resume and self._try_restore()
+        if resume and not restored:
+            warnings.warn(
+                "resume=True but there is nothing to restore "
+                + ("(no checkpoint manager configured)"
+                   if self.checkpoint is None else
+                   f"(no checkpoints in {self.checkpoint.directory})")
+                + " — cold-starting from epoch 0", stacklevel=2)
+        if not restored:
+            self.state = self.init_state()
+            self.history = []
+            self.global_step = 0
+            self._position = (0, 0, [], [])
+        self._stop = False
+        self.preempted = False
+        self.stop_reason = None
+        start_epoch, skip_steps, losses, auxes = self._position
+
+        transfer = jax.device_put if self.prefetch > 0 else None
+        t0 = time.perf_counter()
+        try:
+            # inside the try so a raising on_fit_start hook still gets
+            # on_fit_end cleanup (e.g. PreemptionHook's signal handlers)
+            self._fire("on_fit_start")
+            for epoch in range(start_epoch, self.epochs):
+                stream = self.backend.stream(
+                    b.astuple() for b in self.batcher.epoch(epoch))
+                step_in_epoch = 0
+                if skip_steps:
+                    # fast-forward a resumed mid-epoch position: the
+                    # stream is a pure function of (batcher seed, epoch),
+                    # so discarding the first k payloads reproduces the
+                    # remaining sequence exactly
+                    for _ in range(skip_steps):
+                        next(stream, None)
+                    step_in_epoch, skip_steps = skip_steps, 0
+                for payload in prefetch_iter(stream, self.prefetch,
+                                             transfer=transfer):
+                    self.state, loss, aux = self.backend.step(self.state,
+                                                              payload)
+                    losses.append(loss)
+                    auxes.append(aux)
+                    self.global_step += 1
+                    step_in_epoch += 1
+                    self._position = (epoch, step_in_epoch, losses, auxes)
+                    self._fire("on_step", {"epoch": epoch,
+                                           "step_in_epoch": step_in_epoch,
+                                           "global_step": self.global_step,
+                                           "loss": loss, "aux": aux})
+                    if self._stop:
+                        break
+                if self._stop:
+                    self.preempted = True
+                    self.save_checkpoint(blocking=True)
+                    break
+                rec = self._epoch_record(epoch, losses, auxes, t0)
+                self.history.append(rec)
+                self._position = (epoch + 1, 0, [], [])
+                losses, auxes = [], []
+                self._fire("on_epoch", rec)
+                if self._stop:          # stop requested by an epoch hook
+                    self.preempted = True
+                    self.save_checkpoint(blocking=True)
+                    break
+        finally:
+            self._fire("on_fit_end")
+        return TrainResult(history=self.history,
+                           params=self.backend.params(self.state),
+                           seconds=time.perf_counter() - t0)
+
+    def _epoch_record(self, epoch: int, losses, auxes, t0) -> Dict:
+        rec = {"epoch": epoch,
+               "loss": float(np.mean([float(l) for l in losses])),
+               "time": time.perf_counter() - t0}
+        if self.cfg.multilabel:
+            tp = sum(float(a["tp"]) for a in auxes)
+            fp = sum(float(a["fp"]) for a in auxes)
+            fn = sum(float(a["fn"]) for a in auxes)
+            rec["train_f1"] = micro_f1(tp, fp, fn)
+        else:
+            c = sum(float(a["correct"]) for a in auxes)
+            n = sum(float(a["n"]) for a in auxes)
+            rec["train_acc"] = c / max(n, 1.0)
+        return rec

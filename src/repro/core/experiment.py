@@ -1,0 +1,473 @@
+"""Declarative experiment API: ExperimentSpec → materialized run.
+
+One JSON-round-trippable spec describes everything from dataset preset
+to resumable training run; `build_experiment` materializes graph,
+partition, batcher, model config, optimizer, mesh and a ready Engine
+from it. Every axis the trainer grew over the last PRs — sampler q,
+normalization, sparse block-ELL adjacency + K buckets, mesh/compression
+data-parallelism, prefetch, eval cadence, checkpoint/resume — is a
+typed config value here, not a keyword arg on a monolithic entry point.
+
+Sections (all plain dataclasses, JSON ↔ dataclass via to_json/from_json):
+
+  data       dataset name/scale/seed (repro.graph.make_dataset registry)
+  partition  num_parts / method / seed (repro.graph.partition_graph)
+  batch      q, norm, diag_lambda, node_cap, sparse_adj, block_size,
+             k_slots, batcher seed (repro.core.batching.ClusterBatcher)
+  model      GCNConfig fields; in_dim/out_dim/multilabel of None are
+             inferred from the materialized graph
+  optim      adamw/sgd + hyperparameters (repro.nn.optim)
+  execution  data_shards (None → single device; N → shard_map DP mesh),
+             dp_axis, compression (None|"bf16"|4|8), prefetch depth
+  run        epochs, seed, eval_every + an EXPLICIT eval_split,
+             checkpoint dir/interval/keep, verbose
+
+The resolved spec JSON is the reproducibility artifact: run drivers
+(repro.launch.run_experiment) write it next to the metrics, and
+`ExperimentSpec.from_json` rebuilds the exact run (all materialization
+is seeded).
+
+Preset registry: `preset("ppi"|"ppi_sota"|"ppi_tiny"|"reddit"|...)`
+returns a fresh spec assembled by the paper-dataset config modules
+(repro.configs.{ppi,reddit,amazon2m}) — Table 4 hyperparameters, the
+§4.3 SOTA deep recipe, and CPU-sized *_tiny variants for smoke tests.
+Overrides compose with `apply_overrides(spec, {"run.epochs": 2, ...})`
+(the CLI's `--set section.field=value`, values parsed as JSON literals
+with plain-string fallback).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import importlib
+import json
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.batching import ClusterBatcher
+from repro.core.engine import (_EVAL_SPLITS, CheckpointHook, Engine,
+                               EvalHook, LoggingHook, PreemptionHook,
+                               ShardMapBackend, SingleDeviceBackend,
+                               TrainResult)
+from repro.core.gcn import GCNConfig
+from repro.graph.csr import CSRGraph
+from repro.graph.generators import make_dataset
+from repro.graph.partition import partition_graph
+from repro.nn.optim import Optimizer, adamw, sgd
+
+_NORMS = ("eq1", "eq9", "eq10", "eq11")
+_PARTITION_METHODS = ("metis", "cluster", "random")
+_COMPRESSIONS = (None, "bf16", 4, 8)
+_OPTIMIZERS = ("adamw", "sgd")
+
+
+# ----------------------------------------------------------------------
+# spec sections
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class DataSpec:
+    name: str = "ppi"
+    scale: float = 1.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class PartitionSpec:
+    num_parts: int = 50
+    method: str = "metis"
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class BatchSpec:
+    clusters_per_batch: int = 1
+    norm: str = "eq10"
+    diag_lambda: float = 0.0
+    node_cap: Optional[int] = None
+    pad_multiple: int = 128
+    seed: int = 0
+    drop_overflow: bool = True
+    sparse_adj: bool = False
+    block_size: int = 128
+    k_slots: Union[int, str] = "cap"
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    hidden_dim: int = 512
+    num_layers: int = 3
+    dropout: float = 0.2
+    residual: bool = False
+    layernorm: bool = True
+    precompute_ax: bool = False
+    # None → inferred from the materialized graph (labels/features)
+    multilabel: Optional[bool] = None
+    in_dim: Optional[int] = None
+    out_dim: Optional[int] = None
+
+
+@dataclasses.dataclass
+class OptimSpec:
+    name: str = "adamw"
+    lr: float = 1e-2
+    weight_decay: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    clip_norm: Optional[float] = None
+    momentum: float = 0.0      # sgd only
+
+
+@dataclasses.dataclass
+class ExecutionSpec:
+    data_shards: Optional[int] = None   # None → single device
+    dp_axis: str = "data"
+    compression: Optional[Union[str, int]] = None
+    prefetch: int = 0
+
+
+@dataclasses.dataclass
+class RunSpec:
+    epochs: int = 10
+    seed: int = 0
+    eval_every: int = 0
+    eval_split: str = "auto"
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 1    # epochs between checkpoints
+    checkpoint_keep: int = 3
+    verbose: bool = False
+
+
+_SECTIONS = {"data": DataSpec, "partition": PartitionSpec,
+             "batch": BatchSpec, "model": ModelSpec, "optim": OptimSpec,
+             "execution": ExecutionSpec, "run": RunSpec}
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    name: str = "experiment"
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    partition: PartitionSpec = dataclasses.field(
+        default_factory=PartitionSpec)
+    batch: BatchSpec = dataclasses.field(default_factory=BatchSpec)
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    optim: OptimSpec = dataclasses.field(default_factory=OptimSpec)
+    execution: ExecutionSpec = dataclasses.field(
+        default_factory=ExecutionSpec)
+    run: RunSpec = dataclasses.field(default_factory=RunSpec)
+
+    # -- JSON round trip ------------------------------------------------
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @staticmethod
+    def from_dict(d: Dict) -> "ExperimentSpec":
+        d = dict(d)
+        kw: Dict[str, Any] = {"name": d.pop("name", "experiment")}
+        for key, cls in _SECTIONS.items():
+            sec = d.pop(key, None)
+            if sec is not None:
+                known = {f.name for f in dataclasses.fields(cls)}
+                unknown = set(sec) - known
+                if unknown:
+                    raise ValueError(
+                        f"unknown field(s) {sorted(unknown)} in spec "
+                        f"section {key!r} (known: {sorted(known)})")
+                kw[key] = cls(**sec)
+        if d:
+            raise ValueError(f"unknown spec section(s) {sorted(d)} "
+                             f"(known: {sorted(_SECTIONS)} + name)")
+        return ExperimentSpec(**kw)
+
+    @staticmethod
+    def from_json(s: str) -> "ExperimentSpec":
+        return ExperimentSpec.from_dict(json.loads(s))
+
+    def copy(self) -> "ExperimentSpec":
+        return copy.deepcopy(self)
+
+
+# ----------------------------------------------------------------------
+# overrides (--set section.field=value)
+# ----------------------------------------------------------------------
+def _parse_value(text: str) -> Any:
+    """JSON literal (2, 0.5, true, null, "auto") with plain-string
+    fallback, so `--set batch.k_slots=auto` and `--set run.epochs=2`
+    both do the obvious thing."""
+    try:
+        return json.loads(text)
+    except (json.JSONDecodeError, ValueError):
+        return text
+
+
+def set_override(spec: ExperimentSpec, path: str, value: Any) -> None:
+    """Set one dotted-path field (e.g. "execution.prefetch") in place.
+    String values are parsed as JSON literals with string fallback."""
+    parts = path.split(".")
+    obj: Any = spec
+    for p in parts[:-1]:
+        if not hasattr(obj, p):
+            raise KeyError(f"spec has no section {p!r} (in {path!r})")
+        obj = getattr(obj, p)
+    leaf = parts[-1]
+    if not dataclasses.is_dataclass(obj) or not hasattr(obj, leaf):
+        raise KeyError(f"spec has no field {path!r}")
+    if isinstance(value, str):
+        value = _parse_value(value)
+    setattr(obj, leaf, value)
+
+
+def apply_overrides(spec: ExperimentSpec,
+                    overrides: Dict[str, Any]) -> ExperimentSpec:
+    for path, value in overrides.items():
+        set_override(spec, path, value)
+    return spec
+
+
+def parse_set_items(items: Sequence[str]) -> Dict[str, str]:
+    """CLI `--set section.field=value` strings → overrides dict (shared
+    by every driver so the error message never drifts)."""
+    overrides: Dict[str, str] = {}
+    for item in items or []:
+        if "=" not in item:
+            raise ValueError(f"--set expects section.field=value; "
+                             f"got {item!r}")
+        path, value = item.split("=", 1)
+        overrides[path.strip()] = value
+    return overrides
+
+
+def validate(spec: ExperimentSpec) -> ExperimentSpec:
+    """Cheap structural validation before any expensive materialization
+    — every ValueError here names the offending field."""
+    def check(cond, field, msg):
+        if not cond:
+            raise ValueError(f"spec.{field}: {msg}")
+
+    check(spec.batch.norm in _NORMS, "batch.norm",
+          f"must be one of {_NORMS}; got {spec.batch.norm!r}")
+    check(spec.partition.method in _PARTITION_METHODS, "partition.method",
+          f"must be one of {_PARTITION_METHODS}; "
+          f"got {spec.partition.method!r}")
+    check(spec.partition.num_parts >= 1, "partition.num_parts", ">= 1")
+    ks = spec.batch.k_slots
+    check(isinstance(ks, int) or ks in ("cap", "auto"), "batch.k_slots",
+          f"must be 'cap', 'auto' or an int; got {ks!r}")
+    check(spec.run.eval_split in _EVAL_SPLITS, "run.eval_split",
+          f"must be one of {_EVAL_SPLITS}; got {spec.run.eval_split!r}")
+    check(spec.execution.compression in _COMPRESSIONS,
+          "execution.compression",
+          f"must be one of {_COMPRESSIONS}; "
+          f"got {spec.execution.compression!r}")
+    check(spec.optim.name in _OPTIMIZERS, "optim.name",
+          f"must be one of {_OPTIMIZERS}; got {spec.optim.name!r}")
+    check(spec.run.epochs >= 1, "run.epochs", ">= 1")
+    check(spec.execution.prefetch >= 0, "execution.prefetch", ">= 0")
+    ds = spec.execution.data_shards
+    check(ds is None or ds >= 1, "execution.data_shards",
+          "must be None or >= 1")
+    return spec
+
+
+# ----------------------------------------------------------------------
+# builders: spec → materialized pieces
+# ----------------------------------------------------------------------
+def build_graph(spec: ExperimentSpec) -> CSRGraph:
+    return make_dataset(spec.data.name, scale=spec.data.scale,
+                        seed=spec.data.seed)
+
+
+def build_partition(spec: ExperimentSpec, graph: CSRGraph):
+    return partition_graph(graph, spec.partition.num_parts,
+                           method=spec.partition.method,
+                           seed=spec.partition.seed)
+
+
+def build_batcher(spec: ExperimentSpec, graph: CSRGraph,
+                  parts: np.ndarray) -> ClusterBatcher:
+    b = spec.batch
+    return ClusterBatcher(graph, parts,
+                          clusters_per_batch=b.clusters_per_batch,
+                          norm=b.norm, diag_lambda=b.diag_lambda,
+                          node_cap=b.node_cap,
+                          pad_multiple=b.pad_multiple, seed=b.seed,
+                          drop_overflow=b.drop_overflow,
+                          sparse_adj=b.sparse_adj,
+                          block_size=b.block_size, k_slots=b.k_slots)
+
+
+def build_gcn_config(spec: ExperimentSpec, graph: CSRGraph) -> GCNConfig:
+    """ModelSpec → GCNConfig, inferring in_dim/out_dim/multilabel from
+    the graph when unset — multilabel follows the label array's rank
+    ((N, C) float → multilabel BCE; (N,) int → multiclass CE), so a
+    preset can't silently run the wrong loss on a dataset."""
+    m = spec.model
+    multilabel = (bool(graph.labels.ndim == 2) if m.multilabel is None
+                  else m.multilabel)
+    if m.out_dim is not None:
+        out_dim = m.out_dim
+    elif multilabel:
+        out_dim = int(graph.labels.shape[1])
+    else:
+        out_dim = int(graph.labels.max()) + 1
+    return GCNConfig(
+        in_dim=m.in_dim if m.in_dim is not None
+        else int(graph.features.shape[1]),
+        hidden_dim=m.hidden_dim, out_dim=out_dim,
+        num_layers=m.num_layers, dropout=m.dropout, residual=m.residual,
+        multilabel=multilabel, layernorm=m.layernorm,
+        precompute_ax=m.precompute_ax)
+
+
+def build_optimizer(spec: ExperimentSpec) -> Optimizer:
+    o = spec.optim
+    if o.name == "adamw":
+        return adamw(o.lr, b1=o.b1, b2=o.b2, eps=o.eps,
+                     weight_decay=o.weight_decay, clip_norm=o.clip_norm)
+    if o.name == "sgd":
+        return sgd(o.lr, momentum=o.momentum, clip_norm=o.clip_norm)
+    raise ValueError(f"unknown optimizer {o.name!r}")
+
+
+def build_mesh(spec: ExperimentSpec):
+    """None unless execution.data_shards asks for a DP mesh. The mesh
+    uses the first `data_shards` local devices — multi-device CPU runs
+    must set XLA_FLAGS=--xla_force_host_platform_device_count before
+    jax initializes (see tests/conftest.py run_distributed)."""
+    import jax
+    n = spec.execution.data_shards
+    if n is None:
+        return None
+    avail = len(jax.devices())
+    if avail < n:
+        raise ValueError(
+            f"execution.data_shards={n} but only {avail} device(s) "
+            f"visible; set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} (before jax initializes) or lower "
+            f"data_shards")
+    return jax.make_mesh((n,), (spec.execution.dp_axis,))
+
+
+def build_hooks(spec: ExperimentSpec, graph: CSRGraph, cfg: GCNConfig,
+                checkpoint=None) -> List:
+    """The standard hook stack for a spec-driven run, in firing order:
+    eval first (so val_score lands in the record before it is
+    checkpointed/logged), then checkpoint cadence + preemption, then
+    logging."""
+    hooks: List = []
+    if spec.run.eval_every:
+        hooks.append(EvalHook(graph, cfg, every=spec.run.eval_every,
+                              split=spec.run.eval_split,
+                              norm=spec.batch.norm,
+                              diag_lambda=spec.batch.diag_lambda))
+    if checkpoint is not None:
+        hooks.append(CheckpointHook(every=spec.run.checkpoint_every))
+        hooks.append(PreemptionHook())
+    if spec.run.verbose:
+        hooks.append(LoggingHook())
+    return hooks
+
+
+@dataclasses.dataclass
+class Experiment:
+    """Everything `build_experiment` materialized from one spec."""
+    spec: ExperimentSpec
+    graph: CSRGraph
+    parts: np.ndarray
+    partition_stats: Any
+    batcher: ClusterBatcher
+    cfg: GCNConfig
+    opt: Optimizer
+    mesh: Any
+    engine: Engine
+
+    def fit(self, resume: bool = False) -> TrainResult:
+        return self.engine.fit(resume=resume)
+
+
+def build_experiment(spec: ExperimentSpec, *, graph: Optional[CSRGraph]
+                     = None, mesh=None,
+                     extra_hooks: Sequence = ()) -> Experiment:
+    """Materialize the full run: dataset → partition → batcher → model
+    config → optimizer → backend → hooked Engine. Everything is seeded
+    by the spec, so two builds of the same spec produce bit-identical
+    training trajectories. `graph`/`mesh` can be injected (tests,
+    pre-loaded data); `extra_hooks` append after the standard stack."""
+    validate(spec)
+    if graph is None:
+        graph = build_graph(spec)
+    parts, stats = build_partition(spec, graph)
+    batcher = build_batcher(spec, graph, parts)
+    cfg = build_gcn_config(spec, graph)
+    opt = build_optimizer(spec)
+    if mesh is None:
+        mesh = build_mesh(spec)
+    if mesh is not None:
+        backend = ShardMapBackend(cfg, opt, mesh,
+                                  dp_axis=spec.execution.dp_axis,
+                                  compression=spec.execution.compression)
+    else:
+        backend = SingleDeviceBackend(cfg, opt)
+    checkpoint = None
+    if spec.run.checkpoint_dir:
+        from repro.runtime.checkpoint import CheckpointManager
+        checkpoint = CheckpointManager(spec.run.checkpoint_dir,
+                                       keep=spec.run.checkpoint_keep)
+    hooks = build_hooks(spec, graph, cfg, checkpoint) + list(extra_hooks)
+    engine = Engine(batcher, cfg, backend, epochs=spec.run.epochs,
+                    seed=spec.run.seed, prefetch=spec.execution.prefetch,
+                    hooks=hooks, checkpoint=checkpoint)
+    return Experiment(spec=spec, graph=graph, parts=parts,
+                      partition_stats=stats, batcher=batcher, cfg=cfg,
+                      opt=opt, mesh=mesh, engine=engine)
+
+
+def run_experiment(spec: ExperimentSpec, *, resume: bool = False,
+                   **build_kw):
+    """build + fit in one call; returns (Experiment, TrainResult)."""
+    exp = build_experiment(spec, **build_kw)
+    return exp, exp.fit(resume=resume)
+
+
+# ----------------------------------------------------------------------
+# preset registry — configs/{ppi,reddit,amazon2m}.py as runnable specs
+# ----------------------------------------------------------------------
+_PRESETS: Dict[str, Union[str, Callable[[], ExperimentSpec]]] = {
+    # "module:function", resolved lazily (keeps configs ↔ core acyclic)
+    "ppi": "repro.configs.ppi:spec",
+    "ppi_sota": "repro.configs.ppi:sota_spec",
+    "ppi_tiny": "repro.configs.ppi:tiny_spec",
+    "reddit": "repro.configs.reddit:spec",
+    "reddit_tiny": "repro.configs.reddit:tiny_spec",
+    "amazon2m": "repro.configs.amazon2m:spec",
+    "amazon2m_tiny": "repro.configs.amazon2m:tiny_spec",
+}
+
+
+def register_preset(name: str,
+                    factory: Callable[[], ExperimentSpec]) -> None:
+    _PRESETS[name] = factory
+
+
+def list_presets() -> List[str]:
+    return sorted(_PRESETS)
+
+
+def preset(name: str) -> ExperimentSpec:
+    """A fresh (mutation-safe) ExperimentSpec for a registered preset."""
+    entry = _PRESETS.get(name)
+    if entry is None:
+        raise KeyError(f"unknown preset {name!r}; "
+                       f"known: {list_presets()}")
+    if isinstance(entry, str):
+        mod, fn = entry.split(":")
+        factory = getattr(importlib.import_module(mod), fn)
+    else:
+        factory = entry
+    spec = factory()
+    spec.name = name
+    return validate(spec)

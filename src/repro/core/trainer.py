@@ -1,85 +1,36 @@
 """Cluster-GCN trainer (paper Algorithm 1) + exact full-graph evaluation.
 
-The train step is a single jit'd function over fixed-shape ClusterBatch
-tuples; the epoch loop streams batches from ClusterBatcher. Evaluation
-propagates the FULL graph layer-by-layer with scipy CSR on the host —
-exact (no sampling bias), memory O(N·F) per layer, and independent of the
-training batching (this is how the paper evaluates too).
+`train_cluster_gcn` is a thin wrapper over the step-driven Engine
+(repro.core.engine): it picks the StepBackend (single-device jit, or
+shard_map data-parallel when `mesh=` is given), assembles the standard
+hooks (periodic eval, verbose logging), and runs `Engine.fit()` — the
+signature and training trajectories are unchanged from the pre-Engine
+inline loops (locked by tests/test_engine.py). For the declarative
+config-first path — presets, checkpoint/resume, preemption — see
+repro.core.experiment and `python -m repro.launch.run_experiment`.
 
-Passing `mesh=` switches to the data-parallel path (repro.dist.steps.
-make_gcn_train_step): each shard of the mesh's data axis consumes its own
-cluster batch per step — the block-diagonal objective decomposes exactly
-across clusters — and gradients sync with an optional compressed
-all-reduce (`compression=None|"bf16"|4|8`, see repro.dist.compression).
+Evaluation propagates the FULL graph layer-by-layer with scipy CSR on
+the host — exact (no sampling bias), memory O(N·F) per layer, and
+independent of the training batching (this is how the paper evaluates
+too).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batching import ClusterBatcher
-from repro.core.gcn import GCNConfig, gcn_loss, init_gcn, micro_f1
-from repro.core.prefetch import prefetch_iter
+from repro.core.engine import (Engine, EvalHook, LoggingHook,  # noqa: F401
+                               ShardMapBackend, SingleDeviceBackend,
+                               TrainResult, _dp_groups, make_train_step)
+from repro.core.gcn import GCNConfig, micro_f1
 from repro.graph.csr import CSRGraph
 from repro.graph.normalization import normalize_csr
 from repro.kernels.ops import spmm as spmm_dispatch
-from repro.nn.optim import Optimizer, apply_updates
-
-
-@dataclasses.dataclass
-class TrainResult:
-    history: List[Dict[str, float]]
-    params: Any
-    seconds: float
-
-
-def make_train_step(cfg: GCNConfig, opt: Optimizer,
-                    spmm: Callable = spmm_dispatch):
-    def step(params, opt_state, rng, batch_tuple):
-        rng, sub = jax.random.split(rng)
-        (loss, aux), grads = jax.value_and_grad(gcn_loss, has_aux=True)(
-            params, batch_tuple, cfg, train=True, rng=sub, spmm=spmm)
-        updates, opt_state = opt.update(grads, opt_state, params)
-        params = apply_updates(params, updates)
-        return params, opt_state, rng, loss, aux
-    return jax.jit(step, donate_argnums=(0, 1))
-
-
-def _dp_groups(batches, n: int):
-    """Stream fixed-shape batches into groups of exactly n (one per data
-    shard), grouped by leaf-shape signature so fill-adaptive K buckets
-    (ClusterBatcher k_slots="auto", repro.core.kslots) never mix inside
-    one stacked step — np.stack needs uniform shapes and each bucket is
-    its own jit cache entry anyway. Holds at most n batches per bucket
-    plus each bucket's first n, which wrap-around-fill that bucket's
-    short final group (duplicating a few clusters at the epoch boundary
-    keeps shapes static for jit). Never materializes the whole epoch;
-    with a single bucket ("cap" policy or dense batches) this is exactly
-    the old single-queue behavior."""
-    pending, firsts = {}, {}
-    for b in batches:
-        key = tuple(tuple(leaf.shape)
-                    for leaf in jax.tree_util.tree_leaves(b))
-        first = firsts.setdefault(key, [])
-        if len(first) < n:
-            first.append(b)
-        group = pending.setdefault(key, [])
-        group.append(b)
-        if len(group) == n:
-            yield group
-            pending[key] = []
-    for key, group in pending.items():      # insertion (arrival) order
-        if group:
-            first, j = firsts[key], 0
-            while len(group) < n:
-                group.append(first[j % len(first)])
-                j += 1
-            yield group
+from repro.nn.optim import Optimizer
 
 
 def full_graph_logits(params, graph: CSRGraph, cfg: GCNConfig,
@@ -139,8 +90,8 @@ def train_cluster_gcn(graph: CSRGraph, batcher: ClusterBatcher,
     `eval_graph` (default: graph) is the full graph for evaluation.
     With `mesh=`, trains data-parallel over the mesh's `dp_axis` (one
     cluster batch per shard per step, gradients all-reduced — optionally
-    compressed, see module docstring). `sparse_adj=True` switches the
-    batcher to BlockEllAdj batches, so every Â·(XW) in the step runs
+    compressed, see repro.dist.compression). `sparse_adj=True` switches
+    the batcher to BlockEllAdj batches, so every Â·(XW) in the step runs
     through the differentiable block-ELL spmm (Pallas kernel on TPU)
     instead of the dense XLA matmul — the loss is mathematically
     identical (verified to 1e-4/step by tests/test_sparse_equivalence).
@@ -148,73 +99,29 @@ def train_cluster_gcn(graph: CSRGraph, batcher: ClusterBatcher,
     background thread — including the DP stacking and the device_put —
     overlapping host batch construction with the device step; batch
     order and results are identical to the synchronous loop (0 keeps
-    the fully synchronous path)."""
+    the fully synchronous path).
+
+    Eval runs every `eval_every` epochs on the val split, falling back
+    to the TEST split with a one-time warning when val_mask is missing
+    or empty (the split actually used is recorded per history entry as
+    `eval_split`; the ExperimentSpec path makes the split explicit via
+    run.eval_split)."""
     if sparse_adj and not batcher.sparse_adj:
         batcher = dataclasses.replace(batcher, sparse_adj=True)
-    transfer = jax.device_put if prefetch > 0 else None
-    key = jax.random.PRNGKey(seed)
-    params = init_gcn(key, cfg)
-    rng = jax.random.PRNGKey(seed + 1)
-    eval_graph = eval_graph if eval_graph is not None else graph
-
     if mesh is not None:
-        from repro.dist.steps import (init_gcn_train_state,
-                                      make_gcn_train_step)
-        dsize = int(mesh.shape[dp_axis])
-        dist_step = make_gcn_train_step(cfg, opt, mesh, axis_name=dp_axis,
-                                        compression=compression, spmm=spmm)
-        state = init_gcn_train_state(params, opt, dsize, compression)
+        backend = ShardMapBackend(cfg, opt, mesh, dp_axis=dp_axis,
+                                  compression=compression, spmm=spmm)
     else:
-        opt_state = opt.init(params)
-        step_fn = make_train_step(cfg, opt, spmm)
-
-    history: List[Dict[str, float]] = []
-    t0 = time.perf_counter()
-    for epoch in range(num_epochs):
-        losses, auxes = [], []
-        if mesh is not None:
-            stream = (b.astuple() for b in batcher.epoch(epoch))
-            # leaf-wise stack (adj may be a BlockEllAdj pytree); with
-            # prefetch > 0 the grouping + stacking + device_put all run
-            # on the producer thread, overlapped with the device step
-            stacked_stream = (
-                jax.tree_util.tree_map(lambda *ls: np.stack(ls), *group)
-                for group in _dp_groups(stream, dsize))
-            for stacked in prefetch_iter(stacked_stream, prefetch,
-                                         transfer=transfer):
-                rng, sub = jax.random.split(rng)
-                state, loss, aux = dist_step(state, sub, stacked)
-                losses.append(loss)
-                auxes.append(aux)
-            params = state["params"]
-        else:
-            batch_stream = (b.astuple() for b in batcher.epoch(epoch))
-            for batch_tuple in prefetch_iter(batch_stream, prefetch,
-                                             transfer=transfer):
-                params, opt_state, rng, loss, aux = step_fn(
-                    params, opt_state, rng, batch_tuple)
-                losses.append(loss)
-                auxes.append(aux)
-        rec = {"epoch": epoch,
-               "loss": float(np.mean([float(l) for l in losses])),
-               "time": time.perf_counter() - t0}
-        if cfg.multilabel:
-            tp = sum(float(a["tp"]) for a in auxes)
-            fp = sum(float(a["fp"]) for a in auxes)
-            fn = sum(float(a["fn"]) for a in auxes)
-            rec["train_f1"] = micro_f1(tp, fp, fn)
-        else:
-            c = sum(float(a["correct"]) for a in auxes)
-            n = sum(float(a["n"]) for a in auxes)
-            rec["train_acc"] = c / max(n, 1.0)
-        if eval_every and (epoch + 1) % eval_every == 0:
-            mask = (eval_graph.val_mask if eval_graph.val_mask is not None
-                    and eval_graph.val_mask.any() else eval_graph.test_mask)
-            rec["val_score"] = evaluate(params, eval_graph, cfg, mask,
-                                        batcher.norm, batcher.diag_lambda)
-        history.append(rec)
-        if verbose:
-            print({k: (round(v, 4) if isinstance(v, float) else v)
-                   for k, v in rec.items()})
-    return TrainResult(history=history, params=params,
-                       seconds=time.perf_counter() - t0)
+        backend = SingleDeviceBackend(cfg, opt, spmm)
+    hooks = []
+    if eval_every:
+        hooks.append(EvalHook(eval_graph if eval_graph is not None
+                              else graph, cfg,
+                              every=eval_every, split="auto",
+                              norm=batcher.norm,
+                              diag_lambda=batcher.diag_lambda))
+    if verbose:
+        hooks.append(LoggingHook())
+    engine = Engine(batcher, cfg, backend, epochs=num_epochs, seed=seed,
+                    prefetch=prefetch, hooks=hooks)
+    return engine.fit()

@@ -128,6 +128,17 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
+    def read_metadata(self, step: Optional[int] = None) -> Dict:
+        """The `metadata` dict passed to save() (the Engine keeps its
+        loop position — epoch, step-in-epoch, partial metric
+        accumulators, history — here)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        manifest = json.loads(
+            (self.dir / f"step_{step:010d}" / "manifest.json").read_text())
+        return manifest.get("metadata", {})
+
     def _gc(self) -> None:
         steps = self.steps()
         for s in steps[:-self.keep] if self.keep else []:
