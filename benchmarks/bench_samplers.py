@@ -1,0 +1,109 @@
+"""Cluster vs GraphSAINT sampling: throughput and convergence.
+
+Compares the three `batch.sampler` options on the synthetic
+Reddit-density graph (high average degree — the regime where the
+partition-vs-variance trade-off matters):
+
+* host batch-construction throughput (batches/s and nodes/s of one
+  epoch stream, the producer side of prefetch);
+* convergence: identical model/optimizer/epochs driven through
+  `build_experiment`, reporting final training loss/accuracy and the
+  full-graph validation score per sampler.
+
+    PYTHONPATH=src python -m benchmarks.bench_samplers [--quick]
+
+Writes BENCH_samplers.json (benchmarks.common.write_bench_json).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import section, write_bench_json
+from repro.core.experiment import (ExperimentSpec, DataSpec, BatchSpec,
+                                   ModelSpec, OptimSpec, PartitionSpec,
+                                   RunSpec, build_experiment)
+
+
+def _spec(sampler: str, *, scale: float, epochs: int,
+          num_parts: int, q: int, budget: int) -> ExperimentSpec:
+    return ExperimentSpec(
+        name=f"bench_{sampler}",
+        data=DataSpec(name="reddit", scale=scale, seed=0),
+        partition=PartitionSpec(num_parts=num_parts, method="metis",
+                                seed=0),
+        batch=BatchSpec(sampler=sampler, clusters_per_batch=q,
+                        budget=(None if sampler == "cluster" else budget),
+                        seed=0),
+        model=ModelSpec(hidden_dim=64, num_layers=2, dropout=0.2,
+                        multilabel=False),
+        optim=OptimSpec(name="adamw", lr=1e-2),
+        run=RunSpec(epochs=epochs, seed=0, eval_every=epochs,
+                    eval_split="val"))
+
+
+def bench_build_throughput(batcher, epochs: int = 1) -> dict:
+    t0 = time.perf_counter()
+    batches = nodes = 0
+    for e in range(epochs):
+        for b in batcher.epoch(e):
+            batches += 1
+            nodes += int(b.num_real)
+    dt = time.perf_counter() - t0
+    return dict(build_batches_per_s=round(batches / dt, 1),
+                build_nodes_per_s=round(nodes / dt, 1),
+                avg_batch_nodes=round(nodes / batches, 1),
+                steps_per_epoch=batcher.steps_per_epoch())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small graph / few epochs (the CI-sized run)")
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--epochs", type=int, default=None)
+    args = ap.parse_args(argv)
+    scale = args.scale or (0.02 if args.quick else 0.05)
+    epochs = args.epochs or (3 if args.quick else 10)
+
+    # cluster-comparable sizing: SAINT node budget ≈ the q-cluster
+    # union batch (q·N/p); edge budget halved (two endpoints per draw)
+    from repro.graph.generators import make_dataset
+    n = make_dataset("reddit", scale=scale, seed=0).num_nodes
+    num_parts, q = max(8, n // 150), 2
+    budget = max(1, round(q * n / num_parts))
+
+    rows = []
+    for sampler in ("cluster", "saint_node", "saint_edge"):
+        section(f"sampler={sampler}")
+        bud = budget if sampler != "saint_edge" else -(-budget // 2)
+        spec = _spec(sampler, scale=scale, epochs=epochs,
+                     num_parts=num_parts, q=q, budget=bud)
+        exp = build_experiment(spec)
+        row = dict(name=f"samplers/{sampler}", num_nodes=n,
+                   budget=(None if sampler == "cluster" else bud))
+        row.update(bench_build_throughput(exp.batcher))
+
+        t0 = time.perf_counter()
+        res = build_experiment(spec).fit()
+        row["train_seconds"] = round(time.perf_counter() - t0, 3)
+        last = res.history[-1]
+        row["final_loss"] = round(float(last["loss"]), 4)
+        if "train_acc" in last:
+            row["final_train_acc"] = round(float(last["train_acc"]), 4)
+        if "val_score" in last:
+            row["val_score"] = round(float(last["val_score"]), 4)
+        print(row)
+        rows.append(row)
+
+    out = write_bench_json("samplers", dict(
+        bench="samplers", quick=bool(args.quick), scale=scale,
+        epochs=epochs, num_parts=num_parts, q=q, rows=rows))
+    print(f"\nwrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

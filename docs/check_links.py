@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Markdown link check over README.md and docs/*.md.
+
+Every RELATIVE link (and image) must resolve to an existing file or
+directory, resolved against the markdown file that contains it.
+External http(s)/mailto links are syntax-checked only — the build
+container is offline, so they are never fetched. Exit 1 on any broken
+link; CI's docs-freshness job and tests/test_docs.py both run this.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import List, Tuple
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# [text](target)  /  ![alt](target) — target up to the first ')' or space
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_md_files() -> List[pathlib.Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def broken_links() -> List[Tuple[str, str]]:
+    """(markdown file, link target) pairs whose target does not exist."""
+    bad = []
+    for md in iter_md_files():
+        for m in _LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (ROOT / path.lstrip("/")) if target.startswith("/") \
+                else (md.parent / path)
+            if not resolved.exists():
+                bad.append((str(md.relative_to(ROOT)), target))
+    return bad
+
+
+def main() -> int:
+    bad = broken_links()
+    for md, target in bad:
+        print(f"{md}: broken link -> {target}", file=sys.stderr)
+    n_files = len(iter_md_files())
+    if bad:
+        print(f"{len(bad)} broken link(s) across {n_files} file(s)",
+              file=sys.stderr)
+        return 1
+    print(f"links ok across {n_files} markdown file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -67,3 +67,15 @@ def tiny_spec() -> ExperimentSpec:
     s.run.epochs = 5
     s.run.eval_every = 1
     return s
+
+
+def tiny_saint_spec() -> ExperimentSpec:
+    """ppi_tiny on the GraphSAINT node sampler instead of the cluster
+    batcher — same graph/model/optimizer, partition-free i.i.d.
+    subgraphs with unbiased loss normalization (the repo's first
+    non-cluster workload; repro.core.samplers)."""
+    s = tiny_spec()
+    s.name = "ppi_tiny_saint"
+    s.batch.sampler = "saint_node"
+    s.batch.budget = 128           # ~ the q-cluster union batch size
+    return s

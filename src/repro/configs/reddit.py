@@ -37,3 +37,14 @@ def tiny_spec() -> ExperimentSpec:
     s.run.epochs = 5
     s.run.eval_every = 1
     return s
+
+
+def tiny_saint_spec() -> ExperimentSpec:
+    """reddit_tiny on the GraphSAINT edge sampler (p_e ∝ 1/deg(u) +
+    1/deg(v)) — exercises the edge-sampled variance/bias trade-off on
+    the high-degree Reddit-like generator (repro.core.samplers)."""
+    s = tiny_spec()
+    s.name = "reddit_tiny_saint"
+    s.batch.sampler = "saint_edge"
+    s.batch.budget = 256           # edges/draw → ≤ 512-node batches
+    return s

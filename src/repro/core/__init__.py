@@ -1,6 +1,8 @@
-from repro.core.batching import (ClusterBatch, ClusterBatcher,
+from repro.core.batching import (ClusterBatch, ClusterBatcher, Sampler,
+                                 normalized_subgraph_csr, subgraph_payload,
                                  utilization_stats,
                                  label_entropy_per_cluster)
+from repro.core.samplers import SaintEdgeSampler, SaintNodeSampler
 from repro.core.kslots import KSlotsPlan, plan_k_buckets, fill_stats
 from repro.core.prefetch import prefetch_iter
 from repro.core.gcn import GCNConfig, init_gcn, gcn_forward, gcn_loss, micro_f1

@@ -13,12 +13,22 @@ The padded batch carries a dense normalized adjacency block (clusters are
 small and dense — that is the point of the paper) plus masks. node_cap is
 chosen from partition statistics and rounded to a multiple of 128 so the
 MXU tiles line up.
+
+Cluster partitioning is ONE member of the subgraph-sampling family this
+module serves: anything that can turn a node set into the fixed-shape
+payload above is a `Sampler` (the protocol below), and the Engine,
+both StepBackends, prefetch and checkpoint/resume consume samplers
+polymorphically. The shared machinery — induced subgraph, per-batch
+re-normalization, dense-or-block-ELL adjacency, padding, masks — lives
+in `subgraph_payload`, used by `ClusterBatcher` here and by the
+GraphSAINT-style node/edge samplers in `repro.core.samplers`.
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Iterator, List, Optional, Sequence, Tuple, Union
+from typing import (Iterator, List, Optional, Protocol, Sequence, Tuple,
+                    Union, runtime_checkable)
 
 import numpy as np
 
@@ -58,6 +68,150 @@ class ClusterBatch:
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+@runtime_checkable
+class Sampler(Protocol):
+    """The subgraph-sampling contract the training stack consumes.
+
+    A sampler owns the preprocessing → per-step-subgraph half of
+    Algorithm 1; everything downstream (Engine, SingleDevice/ShardMap
+    StepBackends, prefetch, checkpoint/resume fast-forward) only sees
+    this protocol. Implementations: `ClusterBatcher` (paper §3.2
+    stochastic multiple partitions), `repro.core.samplers.
+    SaintNodeSampler` / `SaintEdgeSampler` (GraphSAINT-style).
+
+    Contract:
+      * `epoch(e)` yields exactly `steps_per_epoch()` fixed-shape
+        `ClusterBatch` payloads, and the stream is a pure function of
+        (sampler config, e) — same config + epoch ⇒ bitwise-identical
+        batches. That determinism is what makes `Engine.fit(resume=
+        True)` exact: skipping the first k payloads of epoch e
+        reproduces the tail of an unkilled run.
+      * `sample_csrs(n)` returns the normalized batch CSR patterns of
+        the FIRST n batches of epoch 0 (the same rng stream training
+        sees) so the k_slots planner (repro.core.kslots) measures
+        exactly what training will tile.
+      * attributes `norm` / `diag_lambda` / `sparse_adj` / `node_cap` /
+        `block_size` / `seed` describe the payload so trainer/eval
+        paths can mirror the batch normalization.
+    """
+    graph: CSRGraph
+    node_cap: Optional[int]
+    norm: str
+    diag_lambda: float
+    sparse_adj: bool
+    block_size: int
+    seed: int
+
+    def epoch(self, epoch_idx: int) -> Iterator["ClusterBatch"]: ...
+
+    def steps_per_epoch(self) -> int: ...
+
+    def sample_csrs(self, n: int) -> List[Tuple[Array, Array, Array]]: ...
+
+    def padding_stats(self, sample_batches: int = 4) -> dict: ...
+
+
+def normalized_subgraph_csr(graph: CSRGraph, nodes: Array, norm: str,
+                            diag_lambda: float = 0.0
+                            ) -> Tuple[Array, Array, Array]:
+    """Normalized CSR (indptr, indices, data) of the induced subgraph on
+    `nodes` — the exact matrix `subgraph_payload` densifies or tiles
+    (so K planning measures what training builds)."""
+    sub, _ = graph.subgraph(nodes)
+    return normalize_csr(sub.indptr, sub.indices, sub.data, norm,
+                         diag_lambda)
+
+
+def subgraph_payload(graph: CSRGraph, nodes: Array, *, node_cap: int,
+                     norm: str, diag_lambda: float = 0.0,
+                     sparse_adj: bool = False, block_size: int = 128,
+                     k_slots: Union[int, str] = "cap", k_plan=None,
+                     loss_weights: Optional[Array] = None) -> "ClusterBatch":
+    """Induced subgraph on `nodes` → fixed-shape ClusterBatch payload.
+
+    The one place batch payloads are built — ClusterBatcher and the
+    GraphSAINT-style samplers all call this, so every sampler emits the
+    exact contract the Engine/backends consume: a (cap, cap) dense
+    normalized adjacency (paper §6.2 per-batch re-normalization) or a
+    BlockEllAdj pytree (sparse_adj=True, never densified; K follows
+    k_slots/k_plan exactly as documented on ClusterBatcher), padded
+    features/labels, node_mask, loss_mask and num_real.
+
+    loss_weights (len(nodes),) scales the loss mask per REAL node —
+    SAINT samplers pass their unbiased-estimator normalization
+    coefficients here (train_mask still zeroes non-training nodes);
+    None keeps the plain {0, 1} training mask of the cluster path.
+    """
+    if k_slots == "auto" and k_plan is None:
+        raise ValueError("k_slots='auto' needs a pre-computed k_plan "
+                         "(repro.core.kslots.plan_k_buckets) — samplers "
+                         "build one at init")
+    sub, _ = graph.subgraph(nodes)  # re-adds Δ links among chosen nodes
+    b = len(nodes)
+    cap = node_cap
+
+    if sparse_adj:
+        # normalize the batch CSR directly (paper §6.2) and tile it —
+        # the dense (cap, cap) block is never materialized. K follows
+        # the k_slots policy: "cap" pins the lossless worst case
+        # cap/B; "auto" picks the smallest pre-planned bucket that
+        # holds this batch losslessly (repro.core.kslots); an int is
+        # used as-is (builders raise if it would drop tiles).
+        from repro.kernels.ops import block_ell_adj_from_csr
+        ip, ix, dt = normalize_csr(sub.indptr, sub.indices, sub.data,
+                                   norm, diag_lambda)
+        if k_slots == "auto":
+            # bucket picked inside the builder from the occupancy it
+            # computes anyway — no extra O(nnz) pass per batch
+            chooser = lambda nf, nt: \
+                k_plan.bucket_for(max(nf, nt, 1))  # noqa: E731
+            adj = block_ell_adj_from_csr(ip, ix, dt, n_cols=cap,
+                                         block=block_size,
+                                         n_rows=cap,
+                                         assume_unique=True,
+                                         k_chooser=chooser)
+        else:
+            k = cap // block_size if k_slots == "cap" else int(k_slots)
+            adj = block_ell_adj_from_csr(ip, ix, dt, n_cols=cap,
+                                         block=block_size,
+                                         k_slots=k, k_slots_t=k,
+                                         n_rows=cap,
+                                         assume_unique=True)
+    else:
+        dense = np.zeros((cap, cap), np.float32)
+        row = np.repeat(np.arange(b), np.diff(sub.indptr))
+        dense[row, sub.indices] = sub.data
+        # re-normalize the combined adjacency (paper §6.2)
+        dense[:b, :b] = normalize_dense(dense[:b, :b], norm, diag_lambda)
+        dense[b:, :] = 0.0
+        dense[:, b:] = 0.0
+        adj = dense
+
+    feat_dim = graph.features.shape[1]
+    feats = np.zeros((cap, feat_dim), np.float32)
+    feats[:b] = graph.features[nodes]
+
+    labels_src = graph.labels
+    if labels_src.ndim == 1:
+        labels = np.zeros((cap,), np.int32)
+    else:
+        labels = np.zeros((cap, labels_src.shape[1]), np.float32)
+    labels[:b] = labels_src[nodes]
+
+    node_mask = np.zeros(cap, bool)
+    node_mask[:b] = True
+    loss_mask = np.zeros(cap, np.float32)
+    if graph.train_mask is not None:
+        loss_mask[:b] = graph.train_mask[nodes].astype(np.float32)
+    else:
+        loss_mask[:b] = 1.0
+    if loss_weights is not None:
+        loss_mask[:b] *= np.asarray(loss_weights, np.float32)
+    return ClusterBatch(adj=adj, features=feats, labels=labels,
+                        node_mask=node_mask, loss_mask=loss_mask,
+                        num_real=np.int32(b))
 
 
 @dataclasses.dataclass
@@ -165,76 +319,17 @@ class ClusterBatcher:
         (or a dense block). The K planner (repro.core.kslots) measures
         THIS, so bucket choice and batch construction cannot drift."""
         nodes = self._batch_nodes(cluster_ids, count_overflow=False)
-        sub, _ = self.graph.subgraph(nodes)
-        return normalize_csr(sub.indptr, sub.indices, sub.data,
-                             self.norm, self.diag_lambda)
+        return normalized_subgraph_csr(self.graph, nodes, self.norm,
+                                       self.diag_lambda)
 
     def batch_from_clusters(self, cluster_ids: Sequence[int]) -> ClusterBatch:
         nodes = self._batch_nodes(cluster_ids)
-        sub, _ = self.graph.subgraph(nodes)  # re-adds Δ links among chosen
-        b = len(nodes)
-        cap = self.node_cap
-
-        if self.sparse_adj:
-            # normalize the batch CSR directly (paper §6.2) and tile it —
-            # the dense (cap, cap) block is never materialized. K follows
-            # the k_slots policy: "cap" pins the lossless worst case
-            # cap/B; "auto" picks the smallest pre-planned bucket that
-            # holds this batch losslessly (repro.core.kslots); an int is
-            # used as-is (builders raise if it would drop tiles).
-            from repro.kernels.ops import block_ell_adj_from_csr
-            ip, ix, dt = normalize_csr(sub.indptr, sub.indices, sub.data,
-                                       self.norm, self.diag_lambda)
-            if self.k_slots == "auto":
-                # bucket picked inside the builder from the occupancy it
-                # computes anyway — no extra O(nnz) pass per batch
-                chooser = lambda nf, nt: \
-                    self.k_plan.bucket_for(max(nf, nt, 1))  # noqa: E731
-                adj = block_ell_adj_from_csr(ip, ix, dt, n_cols=cap,
-                                             block=self.block_size,
-                                             n_rows=cap,
-                                             assume_unique=True,
-                                             k_chooser=chooser)
-            else:
-                k = cap // self.block_size if self.k_slots == "cap" \
-                    else int(self.k_slots)
-                adj = block_ell_adj_from_csr(ip, ix, dt, n_cols=cap,
-                                             block=self.block_size,
-                                             k_slots=k, k_slots_t=k,
-                                             n_rows=cap,
-                                             assume_unique=True)
-        else:
-            dense = np.zeros((cap, cap), np.float32)
-            row = np.repeat(np.arange(b), np.diff(sub.indptr))
-            dense[row, sub.indices] = sub.data
-            # re-normalize the combined adjacency (paper §6.2)
-            dense[:b, :b] = normalize_dense(dense[:b, :b], self.norm,
-                                            self.diag_lambda)
-            dense[b:, :] = 0.0
-            dense[:, b:] = 0.0
-            adj = dense
-
-        feat_dim = self.graph.features.shape[1]
-        feats = np.zeros((cap, feat_dim), np.float32)
-        feats[:b] = self.graph.features[nodes]
-
-        labels_src = self.graph.labels
-        if labels_src.ndim == 1:
-            labels = np.zeros((cap,), np.int32)
-        else:
-            labels = np.zeros((cap, labels_src.shape[1]), np.float32)
-        labels[:b] = labels_src[nodes]
-
-        node_mask = np.zeros(cap, bool)
-        node_mask[:b] = True
-        loss_mask = np.zeros(cap, np.float32)
-        if self.graph.train_mask is not None:
-            loss_mask[:b] = self.graph.train_mask[nodes].astype(np.float32)
-        else:
-            loss_mask[:b] = 1.0
-        return ClusterBatch(adj=adj, features=feats, labels=labels,
-                            node_mask=node_mask, loss_mask=loss_mask,
-                            num_real=np.int32(b))
+        return subgraph_payload(self.graph, nodes, node_cap=self.node_cap,
+                                norm=self.norm,
+                                diag_lambda=self.diag_lambda,
+                                sparse_adj=self.sparse_adj,
+                                block_size=self.block_size,
+                                k_slots=self.k_slots, k_plan=self.k_plan)
 
     # ------------------------------------------------------------------
     def epoch(self, epoch_idx: int) -> Iterator[ClusterBatch]:
@@ -243,14 +338,28 @@ class ClusterBatcher:
         divide num_parts the final batch carries the num_parts % q
         trailing clusters (same padded fixed shape — dropping them would
         silently skip those clusters every epoch)."""
+        for group in self._epoch_groups(epoch_idx):
+            yield self.batch_from_clusters(group)
+
+    def _epoch_groups(self, epoch_idx: int) -> Iterator[Array]:
+        """The epoch's cluster groups — the deterministic (seed, epoch)
+        stream both `epoch` and `sample_csrs` draw from."""
         rng = np.random.default_rng((self.seed, epoch_idx))
         order = rng.permutation(self.num_parts)
         q = self.clusters_per_batch
         for i in range(0, self.num_parts, q):
-            yield self.batch_from_clusters(order[i:i + q])
+            yield order[i:i + q]
 
     def steps_per_epoch(self) -> int:
         return -(-self.num_parts // self.clusters_per_batch)
+
+    def sample_csrs(self, n: int) -> List[Tuple[Array, Array, Array]]:
+        """Normalized batch CSRs of the first `n` batches of epoch 0 —
+        the same rng stream and grouping the real epoch uses, so the
+        k_slots planner (repro.core.kslots) measures exactly what
+        training will tile (Sampler protocol)."""
+        groups = list(self._epoch_groups(0))[:max(1, n)]
+        return [self.batch_csr(g) for g in groups]
 
     # ------------------------------------------------------------------
     def padding_stats(self, sample_batches: int = 4) -> dict:

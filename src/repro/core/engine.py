@@ -40,7 +40,7 @@ from typing import (Any, Callable, Dict, Iterator, List, Optional, Protocol,
 import jax
 import numpy as np
 
-from repro.core.batching import ClusterBatcher
+from repro.core.batching import Sampler
 from repro.core.gcn import GCNConfig, gcn_loss, init_gcn, micro_f1
 from repro.core.prefetch import prefetch_iter
 from repro.kernels.ops import spmm as spmm_dispatch
@@ -108,9 +108,33 @@ class StepBackend(Protocol):
     """One training step, including its RNG threading and any payload
     reshaping (stacking) the step function needs.
 
-    state is an arbitrary checkpointable pytree; `stream` turns the
-    batcher's per-batch tuples into the payloads `step` consumes (the
-    identity for a single device; grouping + leaf-stacking for DP).
+    Contract, method by method:
+
+    * `init(params, rng)` → the backend's state: an arbitrary pytree
+      that must be (a) fully checkpointable (CheckpointManager
+      save/restore round-trips it leaf-for-leaf — no closures, no
+      host-only state the trajectory depends on) and (b) the ONLY
+      mutable thing a step touches, so state_k+1 = step(state_k,
+      payload_k) is a pure function and resume-from-checkpoint is
+      bitwise-exact.
+    * `stream(batches)` adapts the sampler's per-batch tuples into the
+      payloads `step` consumes — the identity for a single device,
+      same-shape grouping + leaf-stacking (one batch per shard) for
+      data-parallel. It must be a lazy iterator (an epoch is never
+      materialized; prefetch wraps it) and must not depend on wall
+      clock or external RNG.
+    * `step(state, payload)` → (new_state, loss, aux). The backend owns
+      its RNG threading (split inside the jit, or on the host before a
+      shard_map call) — the Engine never touches RNG, which is what
+      keeps trajectories identical across backends wrapping the same
+      math.
+    * `params(state)` extracts the current model parameters for eval /
+      TrainResult.
+
+    Implementations: SingleDeviceBackend (jit per-batch step),
+    ShardMapBackend (dist.steps data-parallel step). Custom backends
+    (e.g. multi-host) plug into Engine/ExperimentSpec through this
+    seam alone.
     """
 
     def init(self, params: PyTree, rng: jax.Array) -> PyTree: ...
@@ -335,7 +359,7 @@ class Engine:
     the saved run stopped; with no checkpoint on disk it cold-starts.
     """
 
-    def __init__(self, batcher: ClusterBatcher, cfg: GCNConfig,
+    def __init__(self, batcher: Sampler, cfg: GCNConfig,
                  backend: StepBackend, *, epochs: int, seed: int = 0,
                  prefetch: int = 0, hooks: Sequence = (),
                  checkpoint=None):
@@ -418,6 +442,29 @@ class Engine:
 
     # -- the loop -------------------------------------------------------
     def fit(self, resume: bool = False) -> TrainResult:
+        """Run the training loop; returns TrainResult(history, params,
+        seconds).
+
+        resume=False always cold-starts from `init_state()`.
+        resume=True restores the NEWEST checkpoint in the configured
+        CheckpointManager and continues the exact trajectory of an
+        unkilled run — mid-epoch included:
+
+        * the state pytree (params/optimizer/RNG, whatever the backend's
+          `init` built) is restored leaf-for-leaf;
+        * JSON metadata restores epoch, step-in-epoch, the partial-epoch
+          loss/aux accumulators and the completed history rows;
+        * the batch stream is fast-forwarded by discarding the first
+          `step_in_epoch` payloads: every Sampler's epoch stream is a
+          pure function of (sampler seed, epoch), so the skip reproduces
+          the remaining sequence exactly (cluster AND SAINT samplers —
+          locked by tests/test_engine.py and tests/test_samplers.py
+          over prefetch∈{0,2} and the 2-device DP backend).
+
+        With resume=True but nothing restorable (no manager, or an
+        empty directory) it warns and cold-starts; a checkpoint written
+        by a bare CheckpointManager.save (no Engine metadata) raises
+        instead of silently restarting the epoch."""
         restored = resume and self._try_restore()
         if resume and not restored:
             warnings.warn(

@@ -11,9 +11,13 @@ typed config value here, not a keyword arg on a monolithic entry point.
 Sections (all plain dataclasses, JSON ↔ dataclass via to_json/from_json):
 
   data       dataset name/scale/seed (repro.graph.make_dataset registry)
-  partition  num_parts / method / seed (repro.graph.partition_graph)
-  batch      q, norm, diag_lambda, node_cap, sparse_adj, block_size,
-             k_slots, batcher seed (repro.core.batching.ClusterBatcher)
+  partition  num_parts / method / seed (repro.graph.partition_graph;
+             only materialized by the cluster sampler)
+  batch      sampler ("cluster" | "saint_node" | "saint_edge"), q or
+             SAINT budget/batches_per_epoch, norm, diag_lambda,
+             node_cap, sparse_adj, block_size, k_slots, batcher seed
+             (repro.core.batching.ClusterBatcher /
+             repro.core.samplers.Saint*Sampler)
   model      GCNConfig fields; in_dim/out_dim/multilabel of None are
              inferred from the materialized graph
   optim      adamw/sgd + hyperparameters (repro.nn.optim)
@@ -45,7 +49,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.batching import ClusterBatcher
+from repro.core.batching import ClusterBatcher, Sampler
 from repro.core.engine import (_EVAL_SPLITS, CheckpointHook, Engine,
                                EvalHook, LoggingHook, PreemptionHook,
                                ShardMapBackend, SingleDeviceBackend,
@@ -60,6 +64,16 @@ _NORMS = ("eq1", "eq9", "eq10", "eq11")
 _PARTITION_METHODS = ("metis", "cluster", "random")
 _COMPRESSIONS = (None, "bf16", 4, 8)
 _OPTIMIZERS = ("adamw", "sgd")
+_SAMPLERS = ("cluster", "saint_node", "saint_edge")
+
+
+def _f(default: Any, doc: str) -> Any:
+    """A spec field with its reference documentation attached. The
+    field-by-field reference (docs/experiment-spec.md) is GENERATED
+    from this metadata by docs/gen_spec_reference.py, so the docs
+    cannot drift from the dataclasses — new fields must carry a doc
+    (enforced by tests/test_docs.py)."""
+    return dataclasses.field(default=default, metadata={"doc": doc})
 
 
 # ----------------------------------------------------------------------
@@ -67,76 +81,146 @@ _OPTIMIZERS = ("adamw", "sgd")
 # ----------------------------------------------------------------------
 @dataclasses.dataclass
 class DataSpec:
-    name: str = "ppi"
-    scale: float = 1.0
-    seed: int = 0
+    """Which graph to materialize (repro.graph.generators.make_dataset)."""
+    name: str = _f("ppi", "dataset name in the generator registry: "
+                   "ppi, reddit, amazon2m, cora, structural")
+    scale: float = _f(1.0, "node-count multiplier on the paper-sized "
+                      "graph (*_tiny presets use small scales for CPU)")
+    seed: int = _f(0, "generator seed — one spec = one exact graph")
 
 
 @dataclasses.dataclass
 class PartitionSpec:
-    num_parts: int = 50
-    method: str = "metis"
-    seed: int = 0
+    """Graph clustering (repro.graph.partition_graph). Only used by the
+    cluster sampler; SAINT samplers skip partitioning entirely."""
+    num_parts: int = _f(50, "number of clusters p (paper Table 4)")
+    method: str = _f("metis", "partitioner: metis, cluster or random")
+    seed: int = _f(0, "partitioner seed")
 
 
 @dataclasses.dataclass
 class BatchSpec:
-    clusters_per_batch: int = 1
-    norm: str = "eq10"
-    diag_lambda: float = 0.0
-    node_cap: Optional[int] = None
-    pad_multiple: int = 128
-    seed: int = 0
-    drop_overflow: bool = True
-    sparse_adj: bool = False
-    block_size: int = 128
-    k_slots: Union[int, str] = "cap"
+    """Per-step subgraph construction — the sampler and its payload
+    format (repro.core.batching / repro.core.samplers)."""
+    sampler: str = _f("cluster", "subgraph sampler: 'cluster' (paper "
+                      "Algorithm 1 over the partition), 'saint_node' or "
+                      "'saint_edge' (GraphSAINT-style i.i.d. subgraphs "
+                      "with unbiased loss normalization)")
+    clusters_per_batch: int = _f(1, "q clusters per batch (cluster "
+                                 "sampler only, paper §3.2)")
+    budget: Optional[int] = _f(None, "SAINT draws per batch — nodes "
+                               "(saint_node) or edges (saint_edge); "
+                               "None derives a cluster-batch-sized "
+                               "default from N, num_parts and q")
+    batches_per_epoch: Optional[int] = _f(None, "SAINT steps per epoch; "
+                                          "None derives one "
+                                          "pass-over-the-data "
+                                          "equivalent (N/budget resp. "
+                                          "E/budget)")
+    degree_weighted: bool = _f(False, "saint_node only: draw nodes "
+                               "with p ∝ degree+1 instead of uniformly")
+    norm: str = _f("eq10", "per-batch adjacency normalization: eq1, "
+                   "eq9, eq10 or eq11 (paper equation numbers)")
+    diag_lambda: float = _f(0.0, "λ of the Eq. 11 diagonal enhancement "
+                            "(used by the deep §4.3 recipe)")
+    node_cap: Optional[int] = _f(None, "fixed padded batch size; None "
+                                 "sizes it from partition statistics "
+                                 "(cluster) or the sampling budget "
+                                 "(SAINT)")
+    pad_multiple: int = _f(128, "node_cap is rounded up to this "
+                           "multiple (MXU tile alignment)")
+    seed: int = _f(0, "batch-stream seed; the epoch stream is a pure "
+                   "function of (seed, epoch) — the basis of "
+                   "resume-exact training")
+    drop_overflow: bool = _f(True, "cluster sampler only: truncate "
+                             "batches exceeding node_cap (warns once, "
+                             "counted in padding_stats) instead of "
+                             "raising")
+    sparse_adj: bool = _f(False, "emit block-ELL adjacency "
+                          "(kernels.BlockEllAdj) instead of the dense "
+                          "(cap, cap) block — the differentiable "
+                          "Pallas spmm path")
+    block_size: int = _f(128, "tile edge B of the block-ELL format "
+                         "(node_cap must be divisible by it)")
+    k_slots: Union[int, str] = _f("cap", "block-ELL slot policy: 'cap' "
+                                  "(lossless worst case), 'auto' "
+                                  "(fill-adaptive pow2 buckets, "
+                                  "repro.core.kslots) or a fixed int "
+                                  "(lossless or raise)")
 
 
 @dataclasses.dataclass
 class ModelSpec:
-    hidden_dim: int = 512
-    num_layers: int = 3
-    dropout: float = 0.2
-    residual: bool = False
-    layernorm: bool = True
-    precompute_ax: bool = False
-    # None → inferred from the materialized graph (labels/features)
-    multilabel: Optional[bool] = None
-    in_dim: Optional[int] = None
-    out_dim: Optional[int] = None
+    """GCN architecture (repro.core.gcn.GCNConfig). None-valued fields
+    are inferred from the materialized graph's features/labels."""
+    hidden_dim: int = _f(512, "hidden width of every inner layer")
+    num_layers: int = _f(3, "number of GCN layers")
+    dropout: float = _f(0.2, "feature dropout rate (paper §4: 20%)")
+    residual: bool = _f(False, "add the paper Eq. 8 residual "
+                        "connection where shapes allow")
+    layernorm: bool = _f(True, "layer-norm between inner layers (the "
+                         "deep-GCN experiments use it)")
+    precompute_ax: bool = _f(False, "paper §6.2: precompute A'X once "
+                             "per batch, skipping one propagation")
+    multilabel: Optional[bool] = _f(None, "sigmoid BCE (True) vs "
+                                    "softmax CE (False); None infers "
+                                    "from the label array's rank")
+    in_dim: Optional[int] = _f(None, "input feature dim; None infers "
+                               "from graph.features")
+    out_dim: Optional[int] = _f(None, "output dim; None infers from "
+                                "the labels")
 
 
 @dataclasses.dataclass
 class OptimSpec:
-    name: str = "adamw"
-    lr: float = 1e-2
-    weight_decay: float = 0.0
-    b1: float = 0.9
-    b2: float = 0.999
-    eps: float = 1e-8
-    clip_norm: Optional[float] = None
-    momentum: float = 0.0      # sgd only
+    """Optimizer (repro.nn.optim)."""
+    name: str = _f("adamw", "optimizer: adamw or sgd")
+    lr: float = _f(1e-2, "learning rate")
+    weight_decay: float = _f(0.0, "adamw decoupled weight decay")
+    b1: float = _f(0.9, "adamw β1")
+    b2: float = _f(0.999, "adamw β2")
+    eps: float = _f(1e-8, "adamw ε")
+    clip_norm: Optional[float] = _f(None, "global gradient-norm clip; "
+                                    "None disables")
+    momentum: float = _f(0.0, "sgd momentum (sgd only)")
 
 
 @dataclasses.dataclass
 class ExecutionSpec:
-    data_shards: Optional[int] = None   # None → single device
-    dp_axis: str = "data"
-    compression: Optional[Union[str, int]] = None
-    prefetch: int = 0
+    """Where/how steps execute (repro.dist, repro.core.prefetch)."""
+    data_shards: Optional[int] = _f(None, "None → single device; N → "
+                                    "shard_map data-parallel mesh over "
+                                    "the first N local devices (one "
+                                    "batch per shard per step)")
+    dp_axis: str = _f("data", "mesh axis name of the DP dimension")
+    compression: Optional[Union[str, int]] = _f(None, "gradient "
+                                                "all-reduce wire "
+                                                "format: None (fp32), "
+                                                "'bf16', 4 or 8 "
+                                                "(int4/int8 with error "
+                                                "feedback)")
+    prefetch: int = _f(0, "batches built ahead on a background thread "
+                       "(incl. DP stacking + device_put); 0 is fully "
+                       "synchronous — trajectories are identical "
+                       "either way")
 
 
 @dataclasses.dataclass
 class RunSpec:
-    epochs: int = 10
-    seed: int = 0
-    eval_every: int = 0
-    eval_split: str = "auto"
-    checkpoint_dir: Optional[str] = None
-    checkpoint_every: int = 1    # epochs between checkpoints
-    checkpoint_keep: int = 3
-    verbose: bool = False
+    """Loop length, eval cadence, checkpointing (repro.core.engine)."""
+    epochs: int = _f(10, "training epochs")
+    seed: int = _f(0, "init/step RNG seed (separate from batch.seed)")
+    eval_every: int = _f(0, "full-graph eval every k epochs; 0 disables")
+    eval_split: str = _f("auto", "eval split: train/val/test, or "
+                         "'auto' (val, falling back to test with a "
+                         "warning)")
+    checkpoint_dir: Optional[str] = _f(None, "checkpoint directory; "
+                                       "None disables checkpointing "
+                                       "(and resume)")
+    checkpoint_every: int = _f(1, "epochs between async cadence "
+                               "checkpoints")
+    checkpoint_keep: int = _f(3, "newest checkpoints retained")
+    verbose: bool = _f(False, "per-epoch metric printing (LoggingHook)")
 
 
 _SECTIONS = {"data": DataSpec, "partition": PartitionSpec,
@@ -248,6 +332,13 @@ def validate(spec: ExperimentSpec) -> ExperimentSpec:
         if not cond:
             raise ValueError(f"spec.{field}: {msg}")
 
+    check(spec.batch.sampler in _SAMPLERS, "batch.sampler",
+          f"must be one of {_SAMPLERS}; got {spec.batch.sampler!r}")
+    bud = spec.batch.budget
+    check(bud is None or bud >= 1, "batch.budget", "must be None or >= 1")
+    bpe = spec.batch.batches_per_epoch
+    check(bpe is None or bpe >= 1, "batch.batches_per_epoch",
+          "must be None or >= 1")
     check(spec.batch.norm in _NORMS, "batch.norm",
           f"must be one of {_NORMS}; got {spec.batch.norm!r}")
     check(spec.partition.method in _PARTITION_METHODS, "partition.method",
@@ -287,17 +378,53 @@ def build_partition(spec: ExperimentSpec, graph: CSRGraph):
                            seed=spec.partition.seed)
 
 
+def default_saint_budget(spec: ExperimentSpec, graph: CSRGraph) -> int:
+    """Draws-per-batch default for the SAINT samplers: sized so a batch
+    carries about as many distinct nodes as the cluster sampler's
+    average q-cluster union (q·N/p) — which also makes the derived
+    steps-per-epoch comparable — halved for saint_edge (each edge draw
+    contributes up to two nodes)."""
+    target = max(1, round(spec.batch.clusters_per_batch
+                          * graph.num_nodes / spec.partition.num_parts))
+    if spec.batch.sampler == "saint_edge":
+        target = max(1, -(-target // 2))
+    return target
+
+
 def build_batcher(spec: ExperimentSpec, graph: CSRGraph,
-                  parts: np.ndarray) -> ClusterBatcher:
+                  parts: Optional[np.ndarray]) -> Sampler:
+    """BatchSpec → the spec's Sampler: a ClusterBatcher over `parts`
+    (batch.sampler="cluster") or a GraphSAINT-style node/edge sampler
+    (no partition needed). All samplers emit the same payload contract,
+    so the Engine/backends downstream don't branch on this choice."""
     b = spec.batch
-    return ClusterBatcher(graph, parts,
-                          clusters_per_batch=b.clusters_per_batch,
-                          norm=b.norm, diag_lambda=b.diag_lambda,
-                          node_cap=b.node_cap,
-                          pad_multiple=b.pad_multiple, seed=b.seed,
-                          drop_overflow=b.drop_overflow,
-                          sparse_adj=b.sparse_adj,
-                          block_size=b.block_size, k_slots=b.k_slots)
+    if b.sampler == "cluster":
+        if parts is None:
+            raise ValueError("batch.sampler='cluster' needs a partition")
+        return ClusterBatcher(graph, parts,
+                              clusters_per_batch=b.clusters_per_batch,
+                              norm=b.norm, diag_lambda=b.diag_lambda,
+                              node_cap=b.node_cap,
+                              pad_multiple=b.pad_multiple, seed=b.seed,
+                              drop_overflow=b.drop_overflow,
+                              sparse_adj=b.sparse_adj,
+                              block_size=b.block_size, k_slots=b.k_slots)
+    from repro.core.samplers import SaintEdgeSampler, SaintNodeSampler
+    budget = b.budget if b.budget is not None \
+        else default_saint_budget(spec, graph)
+    common = dict(norm=b.norm, diag_lambda=b.diag_lambda,
+                  node_cap=b.node_cap, pad_multiple=b.pad_multiple,
+                  seed=b.seed, batches_per_epoch=b.batches_per_epoch,
+                  sparse_adj=b.sparse_adj, block_size=b.block_size,
+                  k_slots=b.k_slots)
+    if b.sampler == "saint_node":
+        return SaintNodeSampler(graph, budget,
+                                degree_weighted=b.degree_weighted,
+                                **common)
+    if b.sampler == "saint_edge":
+        return SaintEdgeSampler(graph, budget, **common)
+    raise ValueError(f"unknown sampler {b.sampler!r} "
+                     f"(known: {_SAMPLERS})")
 
 
 def build_gcn_config(spec: ExperimentSpec, graph: CSRGraph) -> GCNConfig:
@@ -377,9 +504,9 @@ class Experiment:
     """Everything `build_experiment` materialized from one spec."""
     spec: ExperimentSpec
     graph: CSRGraph
-    parts: np.ndarray
+    parts: Optional[np.ndarray]    # None for the partition-free samplers
     partition_stats: Any
-    batcher: ClusterBatcher
+    batcher: Sampler
     cfg: GCNConfig
     opt: Optimizer
     mesh: Any
@@ -400,7 +527,11 @@ def build_experiment(spec: ExperimentSpec, *, graph: Optional[CSRGraph]
     validate(spec)
     if graph is None:
         graph = build_graph(spec)
-    parts, stats = build_partition(spec, graph)
+    if spec.batch.sampler == "cluster":
+        parts, stats = build_partition(spec, graph)
+    else:
+        # SAINT samplers draw i.i.d. subgraphs — no partition to build
+        parts, stats = None, None
     batcher = build_batcher(spec, graph, parts)
     cfg = build_gcn_config(spec, graph)
     opt = build_optimizer(spec)
@@ -441,8 +572,10 @@ _PRESETS: Dict[str, Union[str, Callable[[], ExperimentSpec]]] = {
     "ppi": "repro.configs.ppi:spec",
     "ppi_sota": "repro.configs.ppi:sota_spec",
     "ppi_tiny": "repro.configs.ppi:tiny_spec",
+    "ppi_tiny_saint": "repro.configs.ppi:tiny_saint_spec",
     "reddit": "repro.configs.reddit:spec",
     "reddit_tiny": "repro.configs.reddit:tiny_spec",
+    "reddit_tiny_saint": "repro.configs.reddit:tiny_saint_spec",
     "amazon2m": "repro.configs.amazon2m:spec",
     "amazon2m_tiny": "repro.configs.amazon2m:tiny_spec",
 }

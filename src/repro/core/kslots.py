@@ -23,7 +23,7 @@ column-blocks, forward or transposed). Enabled end to end with
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import numpy as np
 
@@ -33,26 +33,20 @@ def pow2_ceil(x: int) -> int:
     return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
 
 
-def batch_needed_k(batcher, cluster_ids: Sequence[int]) -> Tuple[int, int]:
+def csr_needed_k(indptr, indices, block: int, cap: int) -> Tuple[int, int]:
     """(need_fwd, need_t): smallest lossless forward / transposed K for
-    the normalized q-cluster union batch — sparsity pattern only, no
-    tiles built. Measures batcher.batch_csr(...), i.e. exactly the
-    matrix batch_from_clusters tiles."""
+    one normalized batch CSR — sparsity pattern only, no tiles built."""
     from repro.kernels.ops import block_ell_needed_k
-    ip, ix, _ = batcher.batch_csr(cluster_ids)
-    return block_ell_needed_k(ip, ix, batcher.block_size,
-                              n_cols=batcher.node_cap,
-                              n_rows=batcher.node_cap)
+    return block_ell_needed_k(indptr, indices, block, n_cols=cap,
+                              n_rows=cap)
 
 
-def _sample_groups(batcher, n: int):
-    """First n cluster groups of epoch 0 — the same rng stream and
-    grouping the real epoch uses, so the sample is what training sees."""
-    rng = np.random.default_rng((batcher.seed, 0))
-    order = rng.permutation(batcher.num_parts)
-    q = batcher.clusters_per_batch
-    groups = [order[i:i + q] for i in range(0, batcher.num_parts, q)]
-    return groups[:max(1, n)]
+def _sampled_needs(batcher, n: int) -> Tuple[Tuple[int, int], ...]:
+    """Measure the first n epoch-0 batches of ANY Sampler — cluster or
+    GraphSAINT-style — via its `sample_csrs` contract (the same rng
+    stream the real epoch uses, so the sample is what training sees)."""
+    return tuple(csr_needed_k(ip, ix, batcher.block_size, batcher.node_cap)
+                 for ip, ix, _ in batcher.sample_csrs(n))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,7 +59,17 @@ class KSlotsPlan:
     sampled_ft: the (need_fwd, need_t) pairs measured per sampled batch
              (fill_stats reuses them instead of re-sampling).
     sampled_needs: max(need_fwd, need_t, 1) per sampled batch.
-    """
+
+    Contract: `bucket_for(need)` returns the smallest ladder entry
+    >= need, falling back to cap_k — so a batch built at the returned
+    K is ALWAYS lossless, even when epoch-0 sampling under-estimated
+    the fill (the plan can cost padding, never correctness). Batches
+    that land in the same bucket share one step compilation: K is a
+    shape dim, so jax.jit's shape-keyed cache compiles at most
+    len(buckets) step variants. Plans are frozen (a value object): the
+    payload builders capture one at sampler init and batch construction
+    never mutates it, which keeps epoch streams a pure function of
+    (seed, epoch) — the resume-exactness invariant."""
     buckets: Tuple[int, ...]
     cap_k: int
     sampled_ft: Tuple[Tuple[int, int], ...]
@@ -88,8 +92,7 @@ def plan_k_buckets(batcher, sample_batches: int = 8,
     needs, and pick at most `max_buckets` buckets: power-of-two
     ceilings of the sampled median and max, plus the cap/B fallback."""
     cap_k = batcher.node_cap // batcher.block_size
-    sampled_ft = tuple(batch_needed_k(batcher, g)
-                       for g in _sample_groups(batcher, sample_batches))
+    sampled_ft = _sampled_needs(batcher, sample_batches)
     needs = tuple(max(f, t, 1) for f, t in sampled_ft)
     quants = {int(np.ceil(np.quantile(needs, 0.5))), int(max(needs))}
     cands = sorted({min(pow2_ceil(v), cap_k) for v in quants})
@@ -108,8 +111,7 @@ def fill_stats(batcher, sample_batches: int = 4) -> dict:
     if plan is not None and plan.sampled_ft:
         needs = np.array(plan.sampled_ft, dtype=float)
     else:
-        needs = np.array([batch_needed_k(batcher, g) for g in
-                          _sample_groups(batcher, sample_batches)],
+        needs = np.array(_sampled_needs(batcher, sample_batches),
                          dtype=float)
     nf, nt = needs[:, 0], needs[:, 1]
     return dict(cap_k=batcher.node_cap // batcher.block_size,

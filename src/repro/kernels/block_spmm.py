@@ -58,7 +58,24 @@ class BlockEllAdj:
     blocks_t:     (ncb, Kt, B, B)   value tiles of Âᵀ (backward pass)
     block_cols_t: (ncb, Kt) int32
 
-    Built host-side by ops.block_ell_adj_from_dense / _from_csr. All four
+    Format invariants (what builders guarantee and the kernel assumes):
+      * within a row-block, occupied slots come first, ordered by
+        ascending column-block index; unused trailing slots hold an
+        all-zero tile with column id 0 (so padding contributes exactly
+        zero to the product — no masking needed in the kernel);
+      * K and Kt are SHAPE dims: two BlockEllAdj of the same (nrb, K,
+        B, Kt) stack/vmap together and share one jit cache entry —
+        the fill-adaptive k_slots buckets (repro.core.kslots) lean on
+        this, and `core.engine._dp_groups` groups batches by leaf
+        shapes so DP stacks never mix K buckets;
+      * builders are lossless-or-raise: an explicit K that would drop a
+        non-zero tile is a ValueError, never a silent truncation;
+      * `blocks_t`/`block_cols_t` hold exactly Âᵀ in the same format
+        (all-zero padding tiles are skipped during transposition so
+        padding never inflates Kt).
+
+    Built host-side by ops.block_ell_adj_from_dense / _from_csr
+    (numpy leaves — no device round-trip until the step runs). All four
     leaves are data (no static fields), so ClusterBatch stacking, vmap
     over per-shard batches and shard_map partitioning treat it like any
     other batch array.

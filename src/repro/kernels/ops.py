@@ -398,10 +398,28 @@ def spmm(adj, x: jnp.ndarray, *, mode: Mode = "auto",
          block_f: int = 128) -> jnp.ndarray:
     """Adjacency-polymorphic y = Â x — the single spmm seam every
     training path (trainer, shard_map DP step, dry-run) dispatches
-    through. A dense `adj` array keeps the XLA matmul; a `BlockEllAdj`
-    routes to the differentiable block-ELL product (Pallas kernel on
-    TPU, pure-XLA oracle elsewhere; gradients via the transposed tiles,
-    never a dense Â)."""
+    through.
+
+    Contract:
+      * `adj` is either a dense `(n, n)` array — kept on the XLA matmul
+        — or a `BlockEllAdj` pytree, routed to the differentiable
+        block-ELL product `spmm_ell` (Pallas kernel on TPU, pure-XLA
+        oracle elsewhere; `mode='interpret'` forces the kernel body
+        through the Pallas interpreter for CPU validation).
+      * `x` is `(n, F)`; the result is `(n, F)` in `x`'s dtype. `F`
+        need not divide `block_f` — the sparse path pads internally.
+      * Differentiable in both operands on the dense path; on the
+        sparse path d x = Âᵀ ḡ runs on the host-built transposed tiles
+        (a dense Â is never materialized in either direction) and the
+        cotangent for the adjacency is a symbolic zero — Â is training
+        DATA here, not a parameter.
+      * vmap/shard_map: both paths broadcast over leading batch dims
+        (BlockEllAdj's four leaves are plain data, so stacked batches
+        vmap like any array pytree — this is what the DP step relies
+        on).
+    Every ClusterBatch payload (cluster or SAINT sampler, dense or
+    sparse) feeds its adjacency through here, so swapping the batch
+    format can never silently change the model math."""
     if isinstance(adj, BlockEllAdj):
         return spmm_ell(adj, x, impl=_resolve_spmm(mode), block_f=block_f)
     return adj @ x

@@ -4,6 +4,8 @@ ExperimentSpec API.
     python -m repro.launch.run_experiment --preset ppi_sota \
         --set execution.prefetch=2 --set batch.k_slots=auto
     python -m repro.launch.run_experiment --preset ppi_tiny \
+        --set batch.sampler=saint_node        # GraphSAINT sampling
+    python -m repro.launch.run_experiment --preset ppi_tiny \
         --set run.epochs=2 --set run.checkpoint_dir=/tmp/ck
     python -m repro.launch.run_experiment --spec results/.../spec.json \
         --resume
@@ -93,10 +95,15 @@ def main(argv=None) -> int:
     out.mkdir(parents=True, exist_ok=True)
     (out / "spec.json").write_text(spec.to_json(indent=2))
     steps = exp.batcher.steps_per_epoch()
+    if exp.partition_stats is not None:
+        sampler_desc = (f"{spec.partition.num_parts} parts "
+                        f"(within "
+                        f"{exp.partition_stats.within_fraction:.1%})")
+    else:    # partition-free SAINT sampler
+        sampler_desc = (f"{spec.batch.sampler} sampler "
+                        f"(budget {exp.batcher.budget})")
     print(f"[experiment] {spec.name}: {exp.graph.num_nodes} nodes, "
-          f"{exp.graph.num_edges // 2} edges, "
-          f"{spec.partition.num_parts} parts "
-          f"(within {exp.partition_stats.within_fraction:.1%}), "
+          f"{exp.graph.num_edges // 2} edges, {sampler_desc}, "
           f"{steps} steps/epoch x {spec.run.epochs} epochs"
           f"{', resume' if args.resume else ''}", file=sys.stderr)
     result = exp.fit(resume=args.resume)

@@ -1,0 +1,60 @@
+"""The documentation layer is enforced, not aspirational:
+
+* docs/experiment-spec.md and docs/presets.md must be byte-identical to
+  what docs/gen_spec_reference.py renders from the live dataclasses /
+  preset registry (the CI docs-freshness job runs the same check);
+* every ExperimentSpec field must carry the `doc` metadata the
+  generator renders — adding an undocumented field fails here;
+* every relative markdown link in README.md and docs/ must resolve.
+"""
+import dataclasses
+import importlib.util
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _load_docs_module(name: str):
+    spec = importlib.util.spec_from_file_location(
+        f"docs_{name}", ROOT / "docs" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_generated_references_are_fresh():
+    gen = _load_docs_module("gen_spec_reference")
+    for fname, render in gen.FILES.items():
+        path = ROOT / "docs" / fname
+        assert path.exists(), f"docs/{fname} missing — run " \
+                              f"`python docs/gen_spec_reference.py`"
+        assert path.read_text() == render(), (
+            f"docs/{fname} is stale — rerun "
+            f"`python docs/gen_spec_reference.py` and commit the result")
+
+
+def test_every_spec_field_carries_reference_doc():
+    from repro.core import experiment as E
+    for key, cls in E._SECTIONS.items():
+        assert cls.__doc__, f"spec section {key!r} needs a docstring " \
+                            f"(rendered into docs/experiment-spec.md)"
+        for f in dataclasses.fields(cls):
+            assert f.metadata.get("doc"), (
+                f"{cls.__name__}.{f.name} has no doc metadata — add "
+                f"_f(default, \"...\") so docs/experiment-spec.md "
+                f"documents it")
+
+
+def test_markdown_links_resolve():
+    check = _load_docs_module("check_links")
+    assert check.broken_links() == []
+
+
+def test_readme_covers_the_front_door():
+    text = (ROOT / "README.md").read_text()
+    # quickstart, docs pointers, and the tier-1 test command
+    assert "pip install -e ." in text
+    assert "run_experiment --preset ppi_tiny" in text
+    assert "docs/experiment-spec.md" in text
+    assert "docs/presets.md" in text
+    assert "python -m pytest -x -q" in text
