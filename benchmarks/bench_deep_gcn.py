@@ -1,16 +1,37 @@
-"""Paper Table 11 / Fig. 5: diagonal-enhancement variants for deep GCNs.
+"""Paper Table 11 / Fig. 5: diagonal-enhancement variants for deep GCNs,
+plus the precision/memory-policy bench behind them.
 
 Variants (paper numbering):
   (1)        plain Â = D⁻¹A            norm='eq1'
   (10)       Ã = (D+I)⁻¹(A+I)          norm='eq10'
   (10)+(9)   Ã + I                     norm='eq9'
   (10)+(11)  Ã + λ·diag(Ã), λ=1        norm='eq11'
-The claim: only (10)+(11) keeps 7–8-layer GCNs converging."""
+The claim: only (10)+(11) keeps 7–8-layer GCNs converging.
+
+`run_memory` measures what makes those depths AFFORDABLE — the
+precision/memory policy (GCNConfig.precision/remat) against the plain
+fp32 forward, two ways:
+
+* RESIDUAL bytes: the arrays the VJP closes over between forward and
+  backward (jax.vjp residual leaves) — the activation footprint that
+  bf16 halves and layer-chunked jax.checkpoint cuts to chunk
+  boundaries. Backend-independent and deterministic, so the 5-layer
+  reduction `ratio` row is the CI gate (check_regression.py).
+* compiled peak temp bytes + step seconds: what THIS backend actually
+  allocates/spends — informational. NOTE on CPU the bf16 rows cost
+  MORE temp than fp32: XLA:CPU has no native bf16 gemm, so every dot
+  upcasts its operands to f32 copies; the residual savings are what
+  carry to accelerators.
+
+Writes BENCH_deep_gcn.json."""
 from __future__ import annotations
+
+import argparse
+import dataclasses
 
 import numpy as np
 
-from benchmarks.common import csv_row, section
+from benchmarks.common import csv_row, section, timed, write_bench_json
 from repro.core import ClusterBatcher, GCNConfig, train_cluster_gcn
 from repro.graph import make_dataset, partition_graph
 from repro.nn import adamw
@@ -47,5 +68,104 @@ def run(quick: bool = True):
     return table
 
 
+def _policy_step_stats(cfg: GCNConfig, params, batch, rng):
+    """(residual_bytes, temp_bytes, seconds) of the gradient step.
+
+    residual_bytes sums the leaves jax.vjp's backward closure carries —
+    the forward activations held live until the backward pass, the
+    exact quantity bf16 (half-width residuals) and remat (chunk
+    boundaries only) shrink. temp_bytes is the jitted executable's peak
+    scratch on THIS backend; seconds a timed real step."""
+    import jax
+    from repro.core import gcn_loss
+
+    def loss(p, bt):
+        return gcn_loss(p, bt, cfg, train=True, rng=rng)[0]
+
+    _, vjp = jax.vjp(lambda p: loss(p, batch), params)
+    resid = sum(l.size * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(vjp)
+                if hasattr(l, "dtype"))
+
+    grad_fn = lambda p, bt: jax.grad(loss)(p, bt)          # noqa: E731
+    compiled = jax.jit(grad_fn).lower(params, batch).compile()
+    temp = int(compiled.memory_analysis().temp_size_in_bytes)
+    dt, _ = timed(lambda: jax.block_until_ready(compiled(params, batch)))
+    return int(resid), temp, dt
+
+
+def run_memory(quick: bool = True):
+    """Backward-pass memory of the deep-GCN precision policy: fp32
+    no-remat vs bf16 + 2-layer remat chunks at 5 and 8 layers. The
+    `mem-reduction-*` rows carry the gated residual-bytes `ratio`."""
+    import jax
+    from repro.core import init_gcn
+    section("deep-GCN precision policy: backward residual / temp bytes")
+    cap, feat_dim, out_dim = (256, 64, 16) if quick else (512, 128, 32)
+    hidden = 256 if quick else 512
+    rng_np = np.random.default_rng(0)
+    adj = rng_np.random((cap, cap)).astype(np.float32) / cap
+    batch = (adj,
+             rng_np.normal(size=(cap, feat_dim)).astype(np.float32),
+             rng_np.integers(0, out_dim, size=cap).astype(np.int32),
+             np.ones(cap, bool),
+             np.ones(cap, np.float32),
+             np.int32(cap))
+
+    base = GCNConfig(in_dim=feat_dim, hidden_dim=hidden, out_dim=out_dim,
+                     num_layers=5, dropout=0.1, residual=True)
+    policies = {
+        "fp32": {},
+        "bf16-remat": dict(precision="bf16", loss_scaling="static",
+                           remat=True, remat_chunk=2),
+    }
+    rows, resids = [], {}
+    for L in (5, 8):
+        for pname, over in policies.items():
+            cfg = dataclasses.replace(base, num_layers=L, **over)
+            params = init_gcn(jax.random.PRNGKey(0), cfg)
+            resid, temp, dt = _policy_step_stats(cfg, params, batch,
+                                                 jax.random.PRNGKey(1))
+            resids[(L, pname)] = resid
+            rows.append(dict(name=f"deep_gcn/{L}-layer/{pname}",
+                             seconds=dt,
+                             resid_mb=round(resid / 1e6, 3),
+                             temp_mb=round(temp / 1e6, 3),
+                             hidden=hidden, node_cap=cap))
+            print(csv_row(rows[-1]["name"], dt,
+                          f"resid_mb={resid / 1e6:.1f} "
+                          f"temp_mb={temp / 1e6:.1f}"))
+    for L in (5, 8):
+        ratio = resids[(L, "fp32")] / max(resids[(L, "bf16-remat")], 1)
+        rows.append(dict(name=f"deep_gcn/mem-reduction-{L}layer",
+                         ratio=round(ratio, 3),
+                         fp32_resid_mb=round(
+                             resids[(L, "fp32")] / 1e6, 3),
+                         bf16_remat_resid_mb=round(
+                             resids[(L, "bf16-remat")] / 1e6, 3)))
+        print(csv_row(rows[-1]["name"], 0, f"ratio={ratio:.2f}x"))
+    out = write_bench_json("deep_gcn", dict(
+        bench="deep_gcn", quick=quick, backend=jax.default_backend(),
+        node_cap=cap, hidden=hidden, rows=rows))
+    print(f"# wrote {out}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="CPU-budgeted pass (the default; CI runs this)")
+    mode.add_argument("--full", action="store_true",
+                      help="paper-scale settings")
+    ap.add_argument("--memory-only", action="store_true",
+                    help="skip the Table 11 training sweep; only the "
+                         "precision-policy memory bench (the CI gate)")
+    args = ap.parse_args()
+    if not args.memory_only:
+        run(quick=not args.full)
+    run_memory(quick=not args.full)
+
+
 if __name__ == "__main__":
-    run()
+    main()

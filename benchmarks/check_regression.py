@@ -10,11 +10,13 @@ keys (exact, not substring — a key must not accidentally guard sibling
 rows like `.../bucketed-k`, whose higher baseline would make a stricter
 floor than intended), the same-named row must exist in NEW and must not
 have regressed by more than --tol (fraction). Rows carrying
-`speedup_vs_dense` are compared on
-that RATIO (same-machine normalized — robust to CI runners being slower
-or faster than the machine that committed the baseline); rows without
-it fall back to wall-clock seconds, which only makes sense when both
-files come from comparable machines.
+`speedup_vs_dense` or a generic `ratio` (both higher-is-better) are
+compared on that RATIO (same-machine normalized — robust to CI runners
+being slower or faster than the machine that committed the baseline;
+`ratio` also covers machine-independent quantities like the deep-GCN
+peak-memory reduction, whose temp-bytes inputs depend only on the
+compiler); rows without either fall back to wall-clock seconds, which
+only makes sense when both files come from comparable machines.
 """
 from __future__ import annotations
 
@@ -55,6 +57,15 @@ def check(baseline: str, new: str, keys: list[str], tol: float) -> list[str]:
                 print(f"ok {name}: speedup_vs_dense "
                       f"{cur['speedup_vs_dense']} vs baseline "
                       f"{old['speedup_vs_dense']} (tol {tol:.0%})")
+        elif "ratio" in old and "ratio" in cur:
+            lo = old["ratio"] * (1.0 - tol)
+            if cur["ratio"] < lo:
+                errors.append(
+                    f"{name}: ratio {cur['ratio']} < {lo:.2f} "
+                    f"(baseline {old['ratio']} - {tol:.0%})")
+            else:
+                print(f"ok {name}: ratio {cur['ratio']} vs baseline "
+                      f"{old['ratio']} (tol {tol:.0%})")
         else:
             hi = old["seconds"] * (1.0 + tol)
             if cur["seconds"] > hi:

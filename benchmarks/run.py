@@ -34,6 +34,7 @@ def main() -> None:
         "complexity": bench_complexity.run,                   # Tables 1 & 9
         "spmm": bench_spmm.run,                               # Table 6
         "deep_gcn": bench_deep_gcn.run,                       # Table 11/Fig 5
+        "deep_gcn_memory": bench_deep_gcn.run_memory,    # precision policy
         "fig6": bench_fig6.run,                               # Fig 6
         "scale": bench_scale.run,                             # Tables 8 & 13
     }

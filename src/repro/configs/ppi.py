@@ -69,6 +69,28 @@ def tiny_spec() -> ExperimentSpec:
     return s
 
 
+def deep_tiny_spec() -> ExperimentSpec:
+    """CPU-smoke-sized DEEP PPI: the §4.3 deep-GCN shape (8 layers,
+    Eq. 11 diagonal enhancement) under the full precision/memory
+    policy — bf16 compute with dynamic loss scaling, layer-chunked
+    remat, and payload-time A'X (paper §6.2). The CI deep-gcn-smoke job
+    trains this end to end, so the whole mixed-precision path stays
+    exercised on every commit."""
+    s = tiny_spec()
+    s.name = "ppi_deep_tiny"
+    s.batch.norm = SOTA["norm"]
+    s.batch.diag_lambda = SOTA["diag_lambda"]
+    s.model.num_layers = 8
+    s.model.residual = True
+    s.model.precompute_ax = True
+    s.model.precision = "bf16"
+    s.model.loss_scaling = "dynamic"
+    s.model.remat = True
+    s.model.remat_chunk = 2
+    s.run.epochs = 3
+    return s
+
+
 def tiny_saint_spec() -> ExperimentSpec:
     """ppi_tiny on the GraphSAINT node sampler instead of the cluster
     batcher — same graph/model/optimizer, partition-free i.i.d.

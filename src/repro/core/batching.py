@@ -93,8 +93,10 @@ class Sampler(Protocol):
         sees) so the k_slots planner (repro.core.kslots) measures
         exactly what training will tile.
       * attributes `norm` / `diag_lambda` / `sparse_adj` / `node_cap` /
-        `block_size` / `seed` describe the payload so trainer/eval
-        paths can mirror the batch normalization.
+        `block_size` / `seed` / `precompute_ax` describe the payload so
+        trainer/eval paths can mirror the batch normalization (and so
+        the Engine can verify the model's precompute_ax expectation
+        against what the payload actually carries).
     """
     graph: CSRGraph
     node_cap: Optional[int]
@@ -103,6 +105,7 @@ class Sampler(Protocol):
     sparse_adj: bool
     block_size: int
     seed: int
+    precompute_ax: bool
 
     def epoch(self, epoch_idx: int) -> Iterator["ClusterBatch"]: ...
 
@@ -128,7 +131,9 @@ def subgraph_payload(graph: CSRGraph, nodes: Array, *, node_cap: int,
                      norm: str, diag_lambda: float = 0.0,
                      sparse_adj: bool = False, block_size: int = 128,
                      k_slots: Union[int, str] = "cap", k_plan=None,
-                     loss_weights: Optional[Array] = None) -> "ClusterBatch":
+                     loss_weights: Optional[Array] = None,
+                     precompute_ax: bool = False,
+                     tile_pool=None) -> "ClusterBatch":
     """Induced subgraph on `nodes` → fixed-shape ClusterBatch payload.
 
     The one place batch payloads are built — ClusterBatcher and the
@@ -143,6 +148,18 @@ def subgraph_payload(graph: CSRGraph, nodes: Array, *, node_cap: int,
     SAINT samplers pass their unbiased-estimator normalization
     coefficients here (train_mask still zeroes non-training nodes);
     None keeps the plain {0, 1} training mask of the cluster path.
+
+    precompute_ax=True replaces the features with Â'·X aggregated ONCE
+    here on the host (paper §6.2) — the model's first layer then skips
+    its propagation (GCNConfig.precompute_ax). One host spmm per batch
+    instead of one device spmm per step per epoch, and under mixed
+    precision the first aggregation happens in full fp32 numpy.
+
+    tile_pool (kernels.ops.TileBufferPool, sparse path only) recycles
+    the big zero-filled tile buffers across batches instead of
+    allocating fresh ones — safe whenever the consumer is done with a
+    payload before the pool cycles around (the DP stacker copies what
+    it retains longer).
     """
     if k_slots == "auto" and k_plan is None:
         raise ValueError("k_slots='auto' needs a pre-computed k_plan "
@@ -171,14 +188,16 @@ def subgraph_payload(graph: CSRGraph, nodes: Array, *, node_cap: int,
                                          block=block_size,
                                          n_rows=cap,
                                          assume_unique=True,
-                                         k_chooser=chooser)
+                                         k_chooser=chooser,
+                                         pool=tile_pool)
         else:
             k = cap // block_size if k_slots == "cap" else int(k_slots)
             adj = block_ell_adj_from_csr(ip, ix, dt, n_cols=cap,
                                          block=block_size,
                                          k_slots=k, k_slots_t=k,
                                          n_rows=cap,
-                                         assume_unique=True)
+                                         assume_unique=True,
+                                         pool=tile_pool)
     else:
         dense = np.zeros((cap, cap), np.float32)
         row = np.repeat(np.arange(b), np.diff(sub.indptr))
@@ -192,6 +211,15 @@ def subgraph_payload(graph: CSRGraph, nodes: Array, *, node_cap: int,
     feat_dim = graph.features.shape[1]
     feats = np.zeros((cap, feat_dim), np.float32)
     feats[:b] = graph.features[nodes]
+    if precompute_ax:
+        # host-side Â'·X (paper §6.2): aggregate once per batch, in fp32
+        # regardless of the training compute dtype; padding rows stay 0
+        if sparse_adj:
+            import scipy.sparse as sp
+            feats[:b] = sp.csr_matrix((dt, ix, ip),
+                                      shape=(b, b)) @ feats[:b]
+        else:
+            feats[:b] = adj[:b, :b] @ feats[:b]
 
     labels_src = graph.labels
     if labels_src.ndim == 1:
@@ -245,6 +273,12 @@ class ClusterBatcher:
       For async host-side batch construction overlapping the device step
       see the `prefetch=` flag of core.trainer.train_cluster_gcn
       (repro.core.prefetch) — batch order is identical either way.
+    reuse_tile_buffers: sparse path only — recycle the host-side block
+      tile buffers (2 × K·B² floats per batch) through a small ring
+      (kernels.ops.TileBufferPool) instead of zero-filling fresh numpy
+      arrays every batch; values are identical, the consumer just must
+      not hold a payload past the pool depth (the DP stacker copies the
+      batches it retains across the epoch).
     """
     graph: CSRGraph
     parts: Array
@@ -258,6 +292,8 @@ class ClusterBatcher:
     sparse_adj: bool = False
     block_size: int = 128
     k_slots: Union[int, str] = "cap"
+    precompute_ax: bool = False
+    reuse_tile_buffers: bool = False
 
     def __post_init__(self):
         self.parts = np.asarray(self.parts)
@@ -287,6 +323,10 @@ class ClusterBatcher:
         if self.sparse_adj and self.k_slots == "auto":
             from repro.core.kslots import plan_k_buckets
             self.k_plan = plan_k_buckets(self)
+        self._tile_pool = None
+        if self.sparse_adj and self.reuse_tile_buffers:
+            from repro.kernels.ops import TileBufferPool
+            self._tile_pool = TileBufferPool()
 
     # ------------------------------------------------------------------
     def _batch_nodes(self, cluster_ids: Sequence[int],
@@ -329,7 +369,9 @@ class ClusterBatcher:
                                 diag_lambda=self.diag_lambda,
                                 sparse_adj=self.sparse_adj,
                                 block_size=self.block_size,
-                                k_slots=self.k_slots, k_plan=self.k_plan)
+                                k_slots=self.k_slots, k_plan=self.k_plan,
+                                precompute_ax=self.precompute_ax,
+                                tile_pool=self._tile_pool)
 
     # ------------------------------------------------------------------
     def epoch(self, epoch_idx: int) -> Iterator[ClusterBatch]:

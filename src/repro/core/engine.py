@@ -42,6 +42,10 @@ import numpy as np
 
 from repro.core.batching import Sampler
 from repro.core.gcn import GCNConfig, gcn_loss, init_gcn, micro_f1
+from repro.core.precision import (all_finite, init_scale_state,
+                                  policy_from_config, scale_loss,
+                                  select_tree, unscale_grads,
+                                  update_scale_state)
 from repro.core.prefetch import prefetch_iter
 from repro.kernels.ops import spmm as spmm_dispatch
 from repro.nn.optim import Optimizer, apply_updates
@@ -58,14 +62,44 @@ class TrainResult:
 
 def make_train_step(cfg: GCNConfig, opt: Optimizer,
                     spmm: Callable = spmm_dispatch):
-    def step(params, opt_state, rng, batch_tuple):
+    """Single-device jit'd step. With cfg.loss_scaling == "none" (the
+    default) the returned step takes (params, opt_state, rng, batch) and
+    its jaxpr is EXACTLY the pre-precision-policy step — bitwise-locked
+    by tests/test_precision.py. A scaled policy returns a 5-arg step
+    (params, opt_state, rng, scale_state, batch): the gradient is taken
+    of loss·scale, unscaled in fp32, and a non-finite gradient skips the
+    update (params/opt unchanged) while dynamic scaling backs the scale
+    off — the standard mixed-precision recipe."""
+    pol = policy_from_config(cfg)
+    if not pol.scaled:
+        def step(params, opt_state, rng, batch_tuple):
+            rng, sub = jax.random.split(rng)
+            (loss, aux), grads = jax.value_and_grad(gcn_loss, has_aux=True)(
+                params, batch_tuple, cfg, train=True, rng=sub, spmm=spmm)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, rng, loss, aux
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    def scaled_loss(params, batch_tuple, sub, scale):
+        loss, aux = gcn_loss(params, batch_tuple, cfg, train=True,
+                             rng=sub, spmm=spmm)
+        return scale_loss(loss, scale), (loss, aux)
+
+    def step(params, opt_state, rng, scale_state, batch_tuple):
         rng, sub = jax.random.split(rng)
-        (loss, aux), grads = jax.value_and_grad(gcn_loss, has_aux=True)(
-            params, batch_tuple, cfg, train=True, rng=sub, spmm=spmm)
-        updates, opt_state = opt.update(grads, opt_state, params)
-        params = apply_updates(params, updates)
-        return params, opt_state, rng, loss, aux
-    return jax.jit(step, donate_argnums=(0, 1))
+        (_, (loss, aux)), grads = jax.value_and_grad(
+            scaled_loss, has_aux=True)(params, batch_tuple, sub,
+                                       scale_state["scale"])
+        grads = unscale_grads(grads, scale_state["scale"])
+        finite = all_finite(grads)
+        updates, new_opt = opt.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        params = select_tree(finite, new_params, params)
+        opt_state = select_tree(finite, new_opt, opt_state)
+        scale_state = update_scale_state(scale_state, finite, pol)
+        return params, opt_state, rng, scale_state, loss, aux
+    return jax.jit(step, donate_argnums=(0, 1, 3))
 
 
 def _dp_groups(batches, n: int):
@@ -85,7 +119,11 @@ def _dp_groups(batches, n: int):
                     for leaf in jax.tree_util.tree_leaves(b))
         first = firsts.setdefault(key, [])
         if len(first) < n:
-            first.append(b)
+            # deep-copy: a builder reusing host tile buffers
+            # (ClusterBatcher reuse_tile_buffers=True) recycles b's
+            # arrays a few batches later, but firsts must survive to the
+            # epoch's final short group
+            first.append(jax.tree_util.tree_map(np.copy, b))
         group = pending.setdefault(key, [])
         group.append(b)
         if len(group) == n:
@@ -153,15 +191,25 @@ class SingleDeviceBackend:
     def __init__(self, cfg: GCNConfig, opt: Optimizer,
                  spmm: Callable = spmm_dispatch):
         self.opt = opt
+        self._policy = policy_from_config(cfg)
         self._step = make_train_step(cfg, opt, spmm)
 
     def init(self, params, rng):
-        return {"params": params, "opt": self.opt.init(params), "rng": rng}
+        state = {"params": params, "opt": self.opt.init(params), "rng": rng}
+        if self._policy.scaled:
+            state["scale"] = init_scale_state(self._policy)
+        return state
 
     def stream(self, batches):
         return batches
 
     def step(self, state, payload):
+        if self._policy.scaled:
+            params, opt_state, rng, scale, loss, aux = self._step(
+                state["params"], state["opt"], state["rng"],
+                state["scale"], payload)
+            return {"params": params, "opt": opt_state, "rng": rng,
+                    "scale": scale}, loss, aux
         params, opt_state, rng, loss, aux = self._step(
             state["params"], state["opt"], state["rng"], payload)
         return {"params": params, "opt": opt_state, "rng": rng}, loss, aux
@@ -179,27 +227,36 @@ class ShardMapBackend:
 
     def __init__(self, cfg: GCNConfig, opt: Optimizer, mesh, *,
                  dp_axis: str = "data", compression=None,
+                 microbatches: int = 1, compression_group_size=None,
                  spmm: Callable = spmm_dispatch):
         from repro.dist.steps import (init_gcn_train_state,
                                       make_gcn_train_step)
         self.opt = opt
         self.compression = compression
         self.dsize = int(mesh.shape[dp_axis])
+        self.microbatches = max(1, int(microbatches))
+        self._policy = policy_from_config(cfg)
         self._init_state = init_gcn_train_state
-        self._step = make_gcn_train_step(cfg, opt, mesh, axis_name=dp_axis,
-                                         compression=compression, spmm=spmm)
+        self._step = make_gcn_train_step(
+            cfg, opt, mesh, axis_name=dp_axis, compression=compression,
+            microbatches=self.microbatches,
+            compression_group_size=compression_group_size, spmm=spmm)
 
     def init(self, params, rng):
         return {"dist": self._init_state(params, self.opt, self.dsize,
-                                         self.compression),
+                                         self.compression,
+                                         policy=self._policy),
                 "rng": rng}
 
     def stream(self, batches):
         # leaf-wise stack (adj may be a BlockEllAdj pytree); under
         # prefetch the grouping + stacking runs on the producer thread,
-        # overlapped with the device step
+        # overlapped with the device step. With microbatches=m the stack
+        # is dsize*m deep — each shard scans its m batches sequentially,
+        # accumulating gradients before the one sync.
         return (jax.tree_util.tree_map(lambda *ls: np.stack(ls), *group)
-                for group in _dp_groups(batches, self.dsize))
+                for group in _dp_groups(batches,
+                                        self.dsize * self.microbatches))
 
     def step(self, state, payload):
         rng, sub = jax.random.split(state["rng"])
@@ -363,6 +420,15 @@ class Engine:
                  backend: StepBackend, *, epochs: int, seed: int = 0,
                  prefetch: int = 0, hooks: Sequence = (),
                  checkpoint=None):
+        if cfg.precompute_ax and not getattr(batcher, "precompute_ax",
+                                             False):
+            raise ValueError(
+                "cfg.precompute_ax=True but the sampler was built with "
+                "precompute_ax=False: the model expects the payload's "
+                "features to be pre-aggregated (A'X, paper §6.2) and "
+                "layer 1 would silently skip propagation on raw "
+                "features. Rebuild the sampler with precompute_ax=True "
+                "(ExperimentSpec.build_batcher does this automatically).")
         self.batcher = batcher
         self.cfg = cfg
         self.backend = backend

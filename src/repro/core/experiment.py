@@ -18,11 +18,15 @@ Sections (all plain dataclasses, JSON ↔ dataclass via to_json/from_json):
              node_cap, sparse_adj, block_size, k_slots, batcher seed
              (repro.core.batching.ClusterBatcher /
              repro.core.samplers.Saint*Sampler)
-  model      GCNConfig fields; in_dim/out_dim/multilabel of None are
-             inferred from the materialized graph
+  model      GCNConfig fields, including the precision/memory policy
+             (precision, loss_scaling, loss_scale, remat, remat_chunk —
+             repro.core.precision); in_dim/out_dim/multilabel of None
+             are inferred from the materialized graph
   optim      adamw/sgd + hyperparameters (repro.nn.optim)
   execution  data_shards (None → single device; N → shard_map DP mesh),
-             dp_axis, compression (None|"bf16"|4|8), prefetch depth
+             dp_axis, compression (None|"bf16"|4|8) + its group size,
+             microbatches (per-shard gradient accumulation), prefetch
+             depth
   run        epochs, seed, eval_every + an EXPLICIT eval_split,
              checkpoint dir/interval/keep, verbose
 
@@ -65,6 +69,8 @@ _PARTITION_METHODS = ("metis", "cluster", "random")
 _COMPRESSIONS = (None, "bf16", 4, 8)
 _OPTIMIZERS = ("adamw", "sgd")
 _SAMPLERS = ("cluster", "saint_node", "saint_edge")
+_PRECISIONS = ("fp32", "bf16")
+_LOSS_SCALINGS = ("none", "static", "dynamic")
 
 
 def _f(default: Any, doc: str) -> Any:
@@ -147,6 +153,11 @@ class BatchSpec:
                                   "(fill-adaptive pow2 buckets, "
                                   "repro.core.kslots) or a fixed int "
                                   "(lossless or raise)")
+    reuse_tile_buffers: bool = _f(False, "sparse path: recycle the "
+                                  "host-side block tile buffers across "
+                                  "batches (kernels.ops.TileBufferPool) "
+                                  "instead of zero-filling fresh arrays "
+                                  "— identical payload values")
 
 
 @dataclasses.dataclass
@@ -160,8 +171,25 @@ class ModelSpec:
                         "connection where shapes allow")
     layernorm: bool = _f(True, "layer-norm between inner layers (the "
                          "deep-GCN experiments use it)")
-    precompute_ax: bool = _f(False, "paper §6.2: precompute A'X once "
-                             "per batch, skipping one propagation")
+    precompute_ax: bool = _f(False, "paper §6.2: the payload builder "
+                             "aggregates A'X once per batch on the "
+                             "host and the first layer skips its "
+                             "propagation (the sampler is built to "
+                             "match automatically)")
+    precision: str = _f("fp32", "compute dtype of activations/matmul "
+                        "operands: 'fp32' (default, bitwise-identical "
+                        "to the pre-policy model) or 'bf16' (params "
+                        "and matmul accumulators stay fp32)")
+    loss_scaling: str = _f("none", "mixed-precision loss scaling: "
+                           "'none', 'static' (constant loss_scale) or "
+                           "'dynamic' (grow/backoff with non-finite "
+                           "step skipping)")
+    loss_scale: float = _f(32768.0, "initial (static: constant) loss "
+                           "scale when loss_scaling is enabled")
+    remat: bool = _f(False, "wrap layer chunks in jax.checkpoint so "
+                     "the backward recomputes activations — the "
+                     "memory knob for deep GCNs")
+    remat_chunk: int = _f(2, "layers per remat chunk (remat=true only)")
     multilabel: Optional[bool] = _f(None, "sigmoid BCE (True) vs "
                                     "softmax CE (False); None infers "
                                     "from the label array's rank")
@@ -199,6 +227,16 @@ class ExecutionSpec:
                                                 "'bf16', 4 or 8 "
                                                 "(int4/int8 with error "
                                                 "feedback)")
+    compression_group_size: Optional[int] = _f(1024, "elements per "
+                                               "quantization scale "
+                                               "bucket of the int4/int8 "
+                                               "all-reduce; None uses "
+                                               "the compression "
+                                               "module's default")
+    microbatches: int = _f(1, "per-shard gradient-accumulation chunks "
+                           "(DP mesh only): each shard scans this many "
+                           "batches per optimizer step, so only one "
+                           "chunk's backward graph is live at a time")
     prefetch: int = _f(0, "batches built ahead on a background thread "
                        "(incl. DP stacking + device_put); 0 is fully "
                        "synchronous — trajectories are identical "
@@ -361,6 +399,18 @@ def validate(spec: ExperimentSpec) -> ExperimentSpec:
     ds = spec.execution.data_shards
     check(ds is None or ds >= 1, "execution.data_shards",
           "must be None or >= 1")
+    check(spec.model.precision in _PRECISIONS, "model.precision",
+          f"must be one of {_PRECISIONS}; got {spec.model.precision!r}")
+    check(spec.model.loss_scaling in _LOSS_SCALINGS, "model.loss_scaling",
+          f"must be one of {_LOSS_SCALINGS}; "
+          f"got {spec.model.loss_scaling!r}")
+    check(spec.model.loss_scale > 0, "model.loss_scale", "> 0")
+    check(spec.model.remat_chunk >= 1, "model.remat_chunk", ">= 1")
+    check(spec.execution.microbatches >= 1, "execution.microbatches",
+          ">= 1")
+    gs = spec.execution.compression_group_size
+    check(gs is None or gs >= 1, "execution.compression_group_size",
+          "must be None or >= 1")
     return spec
 
 
@@ -408,7 +458,9 @@ def build_batcher(spec: ExperimentSpec, graph: CSRGraph,
                               pad_multiple=b.pad_multiple, seed=b.seed,
                               drop_overflow=b.drop_overflow,
                               sparse_adj=b.sparse_adj,
-                              block_size=b.block_size, k_slots=b.k_slots)
+                              block_size=b.block_size, k_slots=b.k_slots,
+                              precompute_ax=spec.model.precompute_ax,
+                              reuse_tile_buffers=b.reuse_tile_buffers)
     from repro.core.samplers import SaintEdgeSampler, SaintNodeSampler
     budget = b.budget if b.budget is not None \
         else default_saint_budget(spec, graph)
@@ -416,7 +468,9 @@ def build_batcher(spec: ExperimentSpec, graph: CSRGraph,
                   node_cap=b.node_cap, pad_multiple=b.pad_multiple,
                   seed=b.seed, batches_per_epoch=b.batches_per_epoch,
                   sparse_adj=b.sparse_adj, block_size=b.block_size,
-                  k_slots=b.k_slots)
+                  k_slots=b.k_slots,
+                  precompute_ax=spec.model.precompute_ax,
+                  reuse_tile_buffers=b.reuse_tile_buffers)
     if b.sampler == "saint_node":
         return SaintNodeSampler(graph, budget,
                                 degree_weighted=b.degree_weighted,
@@ -447,7 +501,9 @@ def build_gcn_config(spec: ExperimentSpec, graph: CSRGraph) -> GCNConfig:
         hidden_dim=m.hidden_dim, out_dim=out_dim,
         num_layers=m.num_layers, dropout=m.dropout, residual=m.residual,
         multilabel=multilabel, layernorm=m.layernorm,
-        precompute_ax=m.precompute_ax)
+        precompute_ax=m.precompute_ax, precision=m.precision,
+        loss_scaling=m.loss_scaling, loss_scale=m.loss_scale,
+        remat=m.remat, remat_chunk=m.remat_chunk)
 
 
 def build_optimizer(spec: ExperimentSpec) -> Optimizer:
@@ -538,9 +594,11 @@ def build_experiment(spec: ExperimentSpec, *, graph: Optional[CSRGraph]
     if mesh is None:
         mesh = build_mesh(spec)
     if mesh is not None:
-        backend = ShardMapBackend(cfg, opt, mesh,
-                                  dp_axis=spec.execution.dp_axis,
-                                  compression=spec.execution.compression)
+        backend = ShardMapBackend(
+            cfg, opt, mesh, dp_axis=spec.execution.dp_axis,
+            compression=spec.execution.compression,
+            microbatches=spec.execution.microbatches,
+            compression_group_size=spec.execution.compression_group_size)
     else:
         backend = SingleDeviceBackend(cfg, opt)
     checkpoint = None
@@ -573,6 +631,7 @@ _PRESETS: Dict[str, Union[str, Callable[[], ExperimentSpec]]] = {
     "ppi_sota": "repro.configs.ppi:sota_spec",
     "ppi_tiny": "repro.configs.ppi:tiny_spec",
     "ppi_tiny_saint": "repro.configs.ppi:tiny_saint_spec",
+    "ppi_deep_tiny": "repro.configs.ppi:deep_tiny_spec",
     "reddit": "repro.configs.reddit:spec",
     "reddit_tiny": "repro.configs.reddit:tiny_spec",
     "reddit_tiny_saint": "repro.configs.reddit:tiny_saint_spec",

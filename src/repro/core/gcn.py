@@ -18,6 +18,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import policy_from_config
 from repro.kernels.ops import spmm as spmm_dispatch
 from repro.nn.core import glorot, zeros_init
 
@@ -34,7 +35,15 @@ class GCNConfig:
     residual: bool = False        # paper Eq. 8
     multilabel: bool = False      # PPI/Amazon: sigmoid BCE; else softmax CE
     layernorm: bool = True        # used by the deep-GCN experiments
-    precompute_ax: bool = False   # paper §6.2 (AX done once per batch)
+    precompute_ax: bool = False   # paper §6.2: A'X arrives pre-aggregated
+                                  # in the batch payload (subgraph_payload)
+                                  # and layer 1 skips its propagation
+    precision: str = "fp32"       # compute dtype ("fp32"|"bf16"); params
+                                  # and matmul accumulators stay fp32
+    loss_scaling: str = "none"    # "none" | "static" | "dynamic"
+    loss_scale: float = 2.0 ** 15  # initial (static: constant) scale
+    remat: bool = False           # jax.checkpoint over layer chunks
+    remat_chunk: int = 2          # layers per remat chunk
 
     @property
     def dims(self):
@@ -64,33 +73,86 @@ def gcn_forward(params: PyTree, adj, x: jnp.ndarray,
                 cfg: GCNConfig, *, train: bool = False,
                 rng: Optional[jax.Array] = None,
                 spmm: Callable = spmm_dispatch) -> jnp.ndarray:
-    """Returns final-layer logits Z^{(L)} (no activation on last layer)."""
-    h = x
-    for i, layer in enumerate(params["layers"]):
-        if train and cfg.dropout > 0:
+    """Returns final-layer logits Z^{(L)}, always fp32 (no activation on
+    the last layer).
+
+    Precision (cfg.precision via repro.core.precision.PrecisionPolicy):
+    activations and matmul operands run in the policy's compute dtype;
+    every matmul accumulates fp32 (preferred_element_type here, the fp32
+    VMEM scratch inside the block-ELL kernel) and layernorm statistics
+    are fp32. With the default fp32 policy every cast is a no-op and the
+    jaxpr is bitwise-identical to the pre-policy forward.
+
+    Memory (cfg.remat / cfg.remat_chunk): layers are grouped into chunks
+    of `remat_chunk` and each chunk is wrapped in jax.checkpoint, so the
+    backward pass holds one chunk boundary per chunk instead of every
+    layer's activations — the knob that lets 8-10-layer GCNs fit.
+    """
+    pol = policy_from_config(cfg)
+    cd = pol.compute_dtype
+    layers = params["layers"]
+    n = len(layers)
+    need_dropout = train and cfg.dropout > 0
+    # per-layer dropout keys, pre-split with the SAME sequential
+    # rng, sub = split(rng) chain the un-chunked loop used — keys are
+    # bitwise-identical, and hoisting them out of the layer loop is what
+    # lets remat chunks close over explicit key arguments
+    keys = []
+    for _ in range(n):
+        if need_dropout:
             rng, sub = jax.random.split(rng)
+            keys.append(sub)
+        else:
+            keys.append(None)
+
+    def layer_fn(i, h, layer, key):
+        if need_dropout:
             keep = 1.0 - cfg.dropout
-            h = h * jax.random.bernoulli(sub, keep, h.shape) / keep
-        z = h @ layer["w"] + layer["b"]          # X W   : (b, F')
+            h = h * jax.random.bernoulli(key, keep, h.shape) / keep
+        z = (jnp.matmul(h.astype(cd), layer["w"].astype(cd),   # X W
+                        preferred_element_type=jnp.float32)
+             + layer["b"]).astype(cd)
         if not (i == 0 and cfg.precompute_ax):   # Â (XW): (b, b)·(b, F')
             z = spmm(adj, z)
-        last = i == len(params["layers"]) - 1
-        if not last:
+        if i < n - 1:
             if cfg.residual and z.shape == h.shape:
-                z = z + h                        # paper Eq. 8
+                z = z + h.astype(z.dtype)        # paper Eq. 8
             z = jax.nn.relu(z)
             if cfg.layernorm:
-                z = _layernorm(z, layer["ln_scale"])
-        h = z
-    return h
+                z = _layernorm(z.astype(jnp.float32),
+                               layer["ln_scale"]).astype(cd)
+        return z
+
+    def chunk_fn(h, chunk_layers, chunk_keys, start):
+        for j, (layer, key) in enumerate(zip(chunk_layers, chunk_keys)):
+            h = layer_fn(start + j, h, layer, key)
+        return h
+
+    h = x.astype(cd)
+    if cfg.remat:
+        chunk = max(1, int(cfg.remat_chunk))
+        for s in range(0, n, chunk):
+            h = jax.checkpoint(
+                lambda h, ls, ks, s=s: chunk_fn(h, ls, ks, s))(
+                h, layers[s:s + chunk], keys[s:s + chunk])
+    else:
+        for i in range(n):
+            h = layer_fn(i, h, layers[i], keys[i])
+    return h.astype(jnp.float32)
 
 
 def gcn_loss(params: PyTree, batch_tuple, cfg: GCNConfig, *,
              train: bool = True, rng=None, spmm: Callable = spmm_dispatch):
-    """(loss, aux) on a ClusterBatch.astuple(). aux carries micro-F1 parts."""
+    """(loss, aux) on a ClusterBatch.astuple(). aux carries micro-F1 parts.
+
+    With cfg.precompute_ax the A'X product is NOT recomputed here — the
+    payload builder (core.batching.subgraph_payload) already aggregated
+    the features once on the host (paper §6.2), and layer 1 consumes
+    them directly. Samplers built with precompute_ax=False while the
+    model expects pre-aggregated features are caught loudly by
+    Engine/train_cluster_gcn, not silently mis-trained here.
+    """
     adj, feats, labels, node_mask, loss_mask, num_real = batch_tuple
-    if cfg.precompute_ax:
-        feats = spmm(adj, feats)                 # exact 1-hop precompute
     logits = gcn_forward(params, adj, feats, cfg, train=train, rng=rng,
                          spmm=spmm)
     denom = jnp.maximum(loss_mask.sum(), 1.0)

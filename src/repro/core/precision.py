@@ -1,0 +1,150 @@
+"""One precision/memory policy from spec to kernel (deep-GCN training).
+
+`PrecisionPolicy` packages the mixed-precision contract every layer of
+the stack consumes:
+
+  * params stay fp32 (master weights — Adam moments and updates are
+    exact);
+  * activations and matmul OPERANDS are cast to `compute` ("fp32" or
+    "bf16") per layer, while every matmul ACCUMULATES in fp32
+    (`preferred_element_type=jnp.float32` on the XLA dots and an fp32
+    VMEM scratch in the Pallas block-ELL kernel);
+  * the loss is optionally scaled before the backward pass ("static" or
+    "dynamic" loss scaling) so bf16 gradients don't underflow, and
+    gradients are unscaled before the optimizer / the gradient
+    all-reduce (error-feedback compression must see UNSCALED grads —
+    an overflow would otherwise poison the carried residual);
+  * with dynamic scaling, a non-finite gradient skips the step (params,
+    optimizer state and compression residuals are kept) and backs the
+    scale off; `growth_interval` consecutive finite steps grow it back.
+
+With the default fp32/no-scaling policy every cast below is a no-op and
+the emitted HLO is bitwise-identical to the pre-policy code — locked by
+tests/test_precision.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+_COMPUTES = ("fp32", "bf16")
+_SCALINGS = ("none", "static", "dynamic")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """The spec-to-kernel precision contract (see module docstring).
+
+    compute:         activation/operand dtype, "fp32" or "bf16"
+                     (params and accumulators are always fp32)
+    loss_scaling:    "none" | "static" | "dynamic"
+    init_scale:      starting (static: constant) loss scale
+    growth_interval: finite steps before a dynamic scale doubles
+    growth_factor / backoff_factor: dynamic scale multipliers
+    min_scale / max_scale: dynamic scale clamp
+    """
+    compute: str = "fp32"
+    loss_scaling: str = "none"
+    init_scale: float = 2.0 ** 15
+    growth_interval: int = 200
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    min_scale: float = 1.0
+    max_scale: float = 2.0 ** 24
+
+    def __post_init__(self):
+        if self.compute not in _COMPUTES:
+            raise ValueError(f"precision must be one of {_COMPUTES}; "
+                             f"got {self.compute!r}")
+        if self.loss_scaling not in _SCALINGS:
+            raise ValueError(f"loss_scaling must be one of {_SCALINGS}; "
+                             f"got {self.loss_scaling!r}")
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.compute == "bf16" else jnp.float32
+
+    @property
+    def param_dtype(self):
+        return jnp.float32
+
+    @property
+    def mixed(self) -> bool:
+        return self.compute != "fp32"
+
+    @property
+    def scaled(self) -> bool:
+        return self.loss_scaling != "none"
+
+    @property
+    def dynamic(self) -> bool:
+        return self.loss_scaling == "dynamic"
+
+
+def policy_from_config(cfg) -> PrecisionPolicy:
+    """GCNConfig (precision / loss_scaling / loss_scale fields) → policy.
+    getattr defaults keep hand-rolled config objects from older call
+    sites on the exact fp32 path."""
+    return PrecisionPolicy(
+        compute=getattr(cfg, "precision", "fp32"),
+        loss_scaling=getattr(cfg, "loss_scaling", "none"),
+        init_scale=float(getattr(cfg, "loss_scale", 2.0 ** 15)))
+
+
+def init_scale_state(policy: PrecisionPolicy) -> Optional[Dict]:
+    """Loss-scale state pytree: {"scale": f32, "good": i32 consecutive
+    finite steps}. None when the policy doesn't scale (the state — and
+    the step-skip machinery — then never enters the jaxpr)."""
+    if not policy.scaled:
+        return None
+    return {"scale": jnp.asarray(policy.init_scale, jnp.float32),
+            "good": jnp.zeros((), jnp.int32)}
+
+
+def scale_loss(loss, scale):
+    return loss * scale
+
+
+def unscale_grads(grads: PyTree, scale) -> PyTree:
+    inv = 1.0 / scale
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * inv).astype(g.dtype), grads)
+
+
+def all_finite(tree: PyTree) -> jnp.ndarray:
+    """Scalar bool: every leaf of `tree` is finite everywhere."""
+    leaves = [jnp.isfinite(x).all() for x in jax.tree_util.tree_leaves(tree)]
+    if not leaves:
+        return jnp.asarray(True)
+    return jnp.stack(leaves).all()
+
+
+def update_scale_state(state: Dict, finite, policy: PrecisionPolicy) -> Dict:
+    """One dynamic-loss-scale transition: backoff on a non-finite step,
+    grow after `growth_interval` consecutive finite ones. Static scaling
+    is the identity (the scale is a constant)."""
+    if not policy.dynamic:
+        return state
+    good = jnp.where(finite, state["good"] + 1, 0)
+    grow = good >= policy.growth_interval
+    scale = jnp.where(
+        finite,
+        jnp.where(grow,
+                  jnp.minimum(state["scale"] * policy.growth_factor,
+                              policy.max_scale),
+                  state["scale"]),
+        jnp.maximum(state["scale"] * policy.backoff_factor,
+                    policy.min_scale))
+    good = jnp.where(grow, 0, good)
+    return {"scale": scale, "good": good}
+
+
+def select_tree(pred, on_true: PyTree, on_false: PyTree) -> PyTree:
+    """Leaf-wise jnp.where — the step-skip select (pred is a scalar)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), on_true, on_false)

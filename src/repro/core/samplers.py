@@ -71,7 +71,8 @@ class _SaintSampler:
       unit here — draws are i.i.d.); None derives a pass-over-the-data
       equivalent (N/budget nodes, resp. E/budget edges).
     norm/diag_lambda, node_cap/pad_multiple, sparse_adj/block_size/
-      k_slots: payload knobs, exactly as on ClusterBatcher (k_slots
+      k_slots/precompute_ax/reuse_tile_buffers: payload knobs, exactly
+      as on ClusterBatcher (k_slots
       "auto" plans fill-adaptive K buckets from epoch-0 samples via the
       same repro.core.kslots machinery).
     seed: the epoch stream is a pure function of (seed, epoch_idx).
@@ -87,6 +88,8 @@ class _SaintSampler:
     sparse_adj: bool = False
     block_size: int = 128
     k_slots: Union[int, str] = "cap"
+    precompute_ax: bool = False
+    reuse_tile_buffers: bool = False
 
     def __post_init__(self):
         if self.budget < 1:
@@ -118,6 +121,10 @@ class _SaintSampler:
         if self.sparse_adj and self.k_slots == "auto":
             from repro.core.kslots import plan_k_buckets
             self.k_plan = plan_k_buckets(self)
+        self._tile_pool = None
+        if self.sparse_adj and self.reuse_tile_buffers:
+            from repro.kernels.ops import TileBufferPool
+            self._tile_pool = TileBufferPool()
 
     # -- subclass hooks -------------------------------------------------
     def _setup(self) -> None:
@@ -146,7 +153,9 @@ class _SaintSampler:
                                 sparse_adj=self.sparse_adj,
                                 block_size=self.block_size,
                                 k_slots=self.k_slots, k_plan=self.k_plan,
-                                loss_weights=weights)
+                                loss_weights=weights,
+                                precompute_ax=self.precompute_ax,
+                                tile_pool=self._tile_pool)
 
     def epoch(self, epoch_idx: int):
         """steps_per_epoch() i.i.d. subgraph batches. The stream is a

@@ -17,6 +17,7 @@ too).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -108,6 +109,17 @@ def train_cluster_gcn(graph: CSRGraph, batcher: ClusterBatcher,
     run.eval_split)."""
     if sparse_adj and not batcher.sparse_adj:
         batcher = dataclasses.replace(batcher, sparse_adj=True)
+    if cfg.precompute_ax and not getattr(batcher, "precompute_ax", False):
+        # stale caller: the model expects payload-time A'X (paper §6.2)
+        # but the sampler was built without it — rebuild to match rather
+        # than silently skipping layer 1's propagation on raw features
+        warnings.warn(
+            "cfg.precompute_ax=True but the batcher was built with "
+            "precompute_ax=False — rebuilding the batcher with "
+            "payload-time A'X aggregation to match the model "
+            "(build samplers with precompute_ax=True to silence this)",
+            stacklevel=2)
+        batcher = dataclasses.replace(batcher, precompute_ax=True)
     if mesh is not None:
         backend = ShardMapBackend(cfg, opt, mesh, dp_axis=dp_axis,
                                   compression=compression, spmm=spmm)

@@ -27,9 +27,13 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.gcn import GCNConfig, gcn_loss
+from repro.core.precision import (all_finite, init_scale_state,
+                                  policy_from_config, scale_loss,
+                                  select_tree, unscale_grads,
+                                  update_scale_state)
 from repro.kernels.ops import spmm as spmm_dispatch
-from repro.dist.compression import (bf16_psum_mean, compressed_psum_mean,
-                                    psum_mean)
+from repro.dist.compression import (DEFAULT_GROUP_SIZE, bf16_psum_mean,
+                                    compressed_psum_mean, psum_mean)
 from repro.dist.sharding import CellPolicy
 from repro.models.config import ArchConfig
 from repro.models.lm import (decode_step, encode, lm_loss, prefill,
@@ -175,18 +179,22 @@ def make_encode_step(cfg: ArchConfig, policy: CellPolicy,
 # GCN data-parallel step (shard_map over cluster batches)
 # ----------------------------------------------------------------------
 def init_gcn_train_state(params: PyTree, opt: Optimizer, nshards: int,
-                         compression=None) -> Dict:
+                         compression=None, policy=None) -> Dict:
     """{params, opt} (+ per-shard error-feedback residuals, stacked on a
-    leading shard axis, when int compression is on)."""
+    leading shard axis, when int compression is on; + replicated loss
+    "scale" state when the precision policy uses loss scaling)."""
     state = {"params": params, "opt": opt.init(params)}
     if isinstance(compression, int):
         state["err"] = jax.tree_util.tree_map(
             lambda p: jnp.zeros((nshards,) + p.shape, jnp.float32), params)
+    if policy is not None and policy.scaled:
+        state["scale"] = init_scale_state(policy)
     return state
 
 
 def make_gcn_train_step(cfg: GCNConfig, opt: Optimizer, mesh, *,
                         axis_name: str = "data", compression=None,
+                        microbatches: int = 1, compression_group_size=None,
                         spmm: Callable = spmm_dispatch) -> Callable:
     """Data-parallel Cluster-GCN step over stacked cluster batches.
 
@@ -201,37 +209,105 @@ def make_gcn_train_step(cfg: GCNConfig, opt: Optimizer, mesh, *,
     gradients mean-all-reduce across `axis_name`:
       compression=None   exact fp32 psum
       compression="bf16" bf16 wire format
-      compression=4|8    int4/int8 symmetric quant + error feedback
+      compression=4|8    int4/int8 symmetric quant + error feedback,
+                         with per-group scales every
+                         `compression_group_size` elements (None = the
+                         compression module's DEFAULT_GROUP_SIZE)
     Loss is the global mean, aux the global sums (micro-F1 parts).
+
+    microbatches=m > 1 splits each shard's q_local batches into m
+    sequential scan chunks, accumulating fp32 gradients between the
+    single all-reduce — the activation-memory knob for deep GCNs (only
+    one chunk's backward graph is live at a time). m=1 (default) keeps
+    the one-vmap path bitwise-identical to the pre-microbatch step.
+
+    Loss scaling (cfg.loss_scaling via repro.core.precision): the
+    gradient is taken of loss·scale and unscaled BEFORE the all-reduce,
+    so error-feedback residuals live in true gradient units; an
+    overflowed shard's inf/nan reaches every shard through the reduce
+    (quantization maps inf scale to nan payloads), making the
+    skip-update decision — params/opt/err frozen, dynamic scale backed
+    off — consistent across the mesh by construction.
     """
     from jax.experimental.shard_map import shard_map
 
     if compression not in (None, "bf16", 4, 8):
         raise ValueError(
             f"compression must be None, 'bf16', 4 or 8; got {compression!r}")
+    m = int(microbatches)
+    if m < 1:
+        raise ValueError(f"microbatches must be >= 1, got {microbatches}")
+    gsize = DEFAULT_GROUP_SIZE if compression_group_size is None \
+        else int(compression_group_size)
+    if gsize < 1:
+        raise ValueError(f"compression_group_size must be >= 1, got "
+                         f"{compression_group_size}")
     nshards = int(mesh.shape[axis_name])
     bits = compression if isinstance(compression, int) else None
+    pol = policy_from_config(cfg)
+    aux_keys = ("tp", "fp", "fn", "n") if cfg.multilabel \
+        else ("correct", "n")
 
     def shard_fn(state, rng, batch):
         rng = jax.random.fold_in(rng, jax.lax.axis_index(axis_name))
         q_local = jax.tree_util.tree_leaves(batch)[0].shape[0]
         params = state["params"]
+        scale = state["scale"]["scale"] if pol.scaled else None
 
-        def mean_loss(p):
-            keys = jax.random.split(rng, q_local)
+        def chunk_loss(p, chunk, keys):
             losses, auxes = jax.vmap(
                 lambda bt, k: gcn_loss(p, bt, cfg, train=True, rng=k,
-                                       spmm=spmm))(batch, keys)
-            return losses.mean(), auxes
+                                       spmm=spmm))(chunk, keys)
+            loss = losses.mean()
+            out = scale_loss(loss, scale) if pol.scaled else loss
+            return out, (loss, auxes)
 
-        (loss, auxes), grads = jax.value_and_grad(
-            mean_loss, has_aux=True)(params)
+        grad_fn = jax.value_and_grad(chunk_loss, has_aux=True)
+
+        if m > 1:
+            if q_local % m:
+                raise ValueError(
+                    f"{q_local} local batches not divisible by "
+                    f"microbatches={m}")
+            mb = q_local // m
+            ks = jax.random.split(rng, q_local)
+            ks = ks.reshape((m, mb) + ks.shape[1:])
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((m, mb) + x.shape[1:]), batch)
+
+            def mb_fn(carry, xs):
+                g_acc, loss_acc, aux_acc = carry
+                chunk, k = xs
+                (_, (loss, auxes)), grads = grad_fn(params, chunk, k)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                aux_acc = {kk: aux_acc[kk] + auxes[kk].sum()
+                           for kk in aux_acc}
+                return (g_acc, loss_acc + loss, aux_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            aux0 = {kk: jnp.zeros((), jnp.float32) for kk in aux_keys}
+            (grads, loss_sum, aux_local), _ = jax.lax.scan(
+                mb_fn, (g0, jnp.zeros((), jnp.float32), aux0), (mbs, ks))
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+            loss = loss_sum / m
+        else:
+            (_, (loss, auxes)), grads = grad_fn(
+                params, batch, jax.random.split(rng, q_local))
+            aux_local = {kk: v.sum() for kk, v in auxes.items()}
+
+        if pol.scaled:
+            # before the reduce: residuals carry true-unit gradients,
+            # and an inf scale turns into nan payloads the psum spreads
+            grads = unscale_grads(grads, scale)
 
         new_state = dict(state)
         if bits is not None:
             flat_g, treedef = jax.tree_util.tree_flatten(grads)
             flat_e = jax.tree_util.tree_leaves(state["err"])
-            synced = [compressed_psum_mean(g, e[0], axis_name, bits=bits)
+            synced = [compressed_psum_mean(g, e[0], axis_name, bits=bits,
+                                           group_size=gsize)
                       for g, e in zip(flat_g, flat_e)]
             grads = jax.tree_util.tree_unflatten(
                 treedef, [s[0] for s in synced])
@@ -246,17 +322,32 @@ def make_gcn_train_step(cfg: GCNConfig, opt: Optimizer, mesh, *,
 
         # identical on every shard after the all-reduce
         updates, opt_state = opt.update(grads, state["opt"], params)
-        new_state["params"] = apply_updates(params, updates)
-        new_state["opt"] = opt_state
+        new_params = apply_updates(params, updates)
+        if pol.scaled:
+            # post-sync grads are nan everywhere if ANY shard
+            # overflowed, so the skip is mesh-consistent
+            finite = all_finite(grads)
+            new_state["params"] = select_tree(finite, new_params, params)
+            new_state["opt"] = select_tree(finite, opt_state, state["opt"])
+            if bits is not None:
+                new_state["err"] = select_tree(finite, new_state["err"],
+                                               state["err"])
+            new_state["scale"] = update_scale_state(state["scale"],
+                                                    finite, pol)
+        else:
+            new_state["params"] = new_params
+            new_state["opt"] = opt_state
 
         loss = psum_mean(loss, axis_name)
-        aux = {k: jax.lax.psum(v.sum(), axis_name)
-               for k, v in auxes.items()}
+        aux = {kk: jax.lax.psum(v, axis_name)
+               for kk, v in aux_local.items()}
         return new_state, loss, aux
 
     state_spec = {"params": P(), "opt": P()}
     if bits is not None:
         state_spec["err"] = P(axis_name)
+    if pol.scaled:
+        state_spec["scale"] = P()
 
     fn = shard_map(shard_fn, mesh=mesh,
                    in_specs=(state_spec, P(), P(axis_name)),

@@ -98,8 +98,14 @@ def _spmm_kernel(block_cols_ref,          # scalar-prefetch (nrb, K)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = blocks_ref[0, 0].astype(jnp.float32)
-    x = x_ref[...].astype(jnp.float32)
+    # precision contract: operands in x's dtype (bf16 tiles feed the MXU
+    # directly — fp32 inputs keep the exact pre-policy cast), fp32
+    # accumulation in the VMEM scratch via preferred_element_type
+    x = x_ref[...]
+    if x.dtype == jnp.float32:
+        a = blocks_ref[0, 0].astype(jnp.float32)
+    else:
+        a = blocks_ref[0, 0].astype(x.dtype)
     acc_ref[...] += jax.lax.dot_general(
         a, x, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -153,7 +159,16 @@ def spmm_block_ell(blocks: jnp.ndarray, block_cols: jnp.ndarray,
 # differentiable product
 # ----------------------------------------------------------------------
 def _apply(impl: str, blocks, block_cols, x, block_f: int):
-    """One block-ELL product via the resolved backend."""
+    """One block-ELL product via the resolved backend. Under a bf16
+    compute policy (x is bf16) the value tiles are cast down HERE — once,
+    outside the kernel — so the kernel streams half the tile bytes; the
+    fp32 accumulator inside the kernels is unconditional. The backward
+    pass re-enters through this same function on the transposed tiles
+    with the cotangent's dtype, so fwd and bwd share one contract."""
+    if (x.dtype != jnp.float32
+            and jnp.issubdtype(x.dtype, jnp.floating)
+            and blocks.dtype != x.dtype):
+        blocks = blocks.astype(x.dtype)
     if blocks.shape[1] == 0:          # K = 0: identically-zero product
         return jnp.zeros((blocks.shape[0] * blocks.shape[2], x.shape[1]),
                          x.dtype)

@@ -45,6 +45,67 @@ def _resolve_spmm(mode: Mode) -> str:
 # ----------------------------------------------------------------------
 # block-ELL construction (host, numpy)
 # ----------------------------------------------------------------------
+class TileBufferPool:
+    """Ring of reusable zeroed host buffers for the block-ELL builders.
+
+    The builders' dominant allocation is the pair of K·B² tile arrays
+    (forward + transpose) they zero-fill per batch — at cap 8192, B 128,
+    K 64 that is 2 × 512 MB of fresh np.zeros per batch. A pool hands
+    out the same `depth` buffers round-robin per (size, dtype) and
+    re-zeros ONLY the positions the builder reported writing
+    (`mark(buf, flat_indices)`) — for sparse batches that is the nnz
+    footprint, not the full buffer, so steady-state builder cost tracks
+    the data actually written.
+
+    Correctness contract: a buffer handed out by `zeros` is recycled
+    after `depth` further same-key requests, so the consumer must be
+    done with a payload by then (training steps consume batches in
+    order; prefetch queues are shallower than `depth`; the DP stacker
+    deep-copies the few batches it retains across an epoch —
+    engine._dp_groups). A buffer that was never `mark`ed is fully
+    re-zeroed on recycle, so forgetting to mark costs speed, never
+    correctness. Not thread-safe — use one pool per producer thread
+    (each sampler owns its own).
+    """
+
+    def __init__(self, depth: int = 8):
+        self.depth = max(2, int(depth))
+        # (size, dtype str) -> {"bufs": [arr], "written": [idx|None], "i"}
+        self._rings: dict = {}
+        self._slots: dict = {}         # id(flat buffer) -> (key, index)
+
+    def zeros(self, n: int, dtype) -> np.ndarray:
+        """An all-zero flat (n,) buffer of `dtype`, freshly allocated
+        until the ring is full, then recycled round-robin."""
+        key = (int(n), np.dtype(dtype).str)
+        ring = self._rings.setdefault(key,
+                                      {"bufs": [], "written": [], "i": 0})
+        if len(ring["bufs"]) < self.depth:
+            buf = np.zeros(n, dtype)
+            ring["bufs"].append(buf)
+            ring["written"].append(None)
+            self._slots[id(buf)] = (key, len(ring["bufs"]) - 1)
+            return buf
+        i = ring["i"]
+        ring["i"] = (i + 1) % self.depth
+        buf = ring["bufs"][i]
+        w = ring["written"][i]
+        if w is None:
+            buf[:] = 0                  # unknown writes: full re-zero
+        elif len(w):
+            buf[w] = 0                  # sparse re-zero of what was used
+        ring["written"][i] = None
+        return buf
+
+    def mark(self, buf: np.ndarray, flat_indices: np.ndarray) -> None:
+        """Record the flat positions written into a pooled buffer so its
+        next recycle zeroes only those. No-op for foreign buffers."""
+        slot = self._slots.get(id(buf))
+        if slot is not None:
+            key, i = slot
+            self._rings[key]["written"][i] = flat_indices
+
+
 def block_ell_from_dense(adj: np.ndarray, block: int = 128,
                          k_slots: int | None = None):
     """Tile a dense (n, m) matrix into block-ELL. Returns (blocks,
@@ -108,21 +169,36 @@ def _block_ell_from_coo(rows, cols, data, nrb: int, ncb: int, block: int,
 
 
 def _scatter_tiles(present, rb, cb, rlo, clo, data, K: int, B: int,
-                   assume_unique: bool, dtype=np.float32):
+                   assume_unique: bool, dtype=np.float32, pool=None):
     """One block-ELL scatter direction given the (nrb, ncb) tile
     occupancy and per-nnz block/offset coordinates. The caller has
-    already validated K against the per-row-block need."""
+    already validated K against the per-row-block need. `pool`
+    (TileBufferPool) sources the two output buffers from the reuse ring
+    instead of fresh np.zeros — bit-identical output, the written
+    positions are reported back so recycling re-zeros only those."""
     nrb, ncb = present.shape
-    cols_arr = np.zeros((nrb, K), np.int32)
+    if pool is None:
+        cols_flat = np.zeros(nrb * K, np.int32)
+    else:
+        cols_flat = pool.zeros(nrb * K, np.int32)
+    cols_arr = cols_flat.reshape(nrb, K)
     if K == 0 or not present.any():
-        return np.zeros((nrb, K, B, B), dtype), cols_arr
+        if pool is None:
+            blocks_flat = np.zeros(nrb * K * B * B, dtype)
+        else:
+            blocks_flat = pool.zeros(nrb * K * B * B, dtype)
+            empty = np.empty(0, np.int64)
+            pool.mark(cols_flat, empty)
+            pool.mark(blocks_flat, empty)
+        return blocks_flat.reshape(nrb, K, B, B), cols_arr
     # rank of tile (r, c) among the occupied tiles of row-block r,
     # ordered by ascending c — the slot layout the loop-based reference
     # produces (np.nonzero scans row-major, so no sort needed here either)
     idt = np.int32 if nrb * K * B * B < 2**31 else np.int64
     rank = (np.cumsum(present, axis=1) - 1).astype(idt)    # (nrb, ncb)
     pr, pc = np.nonzero(present)
-    cols_arr[pr, rank[pr, pc]] = pc.astype(np.int32)
+    cslot = rank[pr, pc]
+    cols_arr[pr, cslot] = pc.astype(np.int32)
     # one flat scatter: distinct coordinates map to distinct flat
     # indices, so plain fancy assignment is exact (and ~5× cheaper than
     # the buffered np.add.at, which is kept for the duplicate case —
@@ -134,7 +210,12 @@ def _scatter_tiles(present, rb, cb, rlo, clo, data, K: int, B: int,
         * idt(B * B)
     flat = tstart[rb, cb] + rlo.astype(idt, copy=False) * idt(B) \
         + clo.astype(idt, copy=False)
-    blocks = np.zeros(nrb * K * B * B, dtype)
+    if pool is None:
+        blocks = np.zeros(nrb * K * B * B, dtype)
+    else:
+        blocks = pool.zeros(nrb * K * B * B, dtype)
+        pool.mark(cols_flat, pr.astype(np.int64) * K + cslot)
+        pool.mark(blocks, flat)
     if assume_unique:
         blocks[flat] = data
     else:
@@ -337,7 +418,7 @@ def block_ell_adj_from_csr(indptr, indices, data, n_cols: int,
                            k_slots_t: int | None = None,
                            n_rows: int | None = None,
                            assume_unique: bool | None = None,
-                           k_chooser=None) -> BlockEllAdj:
+                           k_chooser=None, pool=None) -> BlockEllAdj:
     """BlockEllAdj from CSR without densifying — the ClusterBatcher
     sparse path (normalize_csr output goes straight to tiles). The
     transpose is built DIRECTLY from the CSR coordinates (CSC = swapped
@@ -350,7 +431,9 @@ def block_ell_adj_from_csr(indptr, indices, data, n_cols: int,
     (need_fwd, need_t) to one K for both directions — the fill-adaptive
     bucket policy picks its bucket HERE, from the occupancy this
     builder computes anyway, instead of paying a separate
-    block_ell_needed_k pass per batch."""
+    block_ell_needed_k pass per batch. `pool` (TileBufferPool) reuses
+    the big tile buffers across calls — see the pool's lifetime
+    contract; output values are bit-identical either way."""
     n = len(indptr) - 1
     B = block
     nrb, ncb = -(-max(n, n_rows or 0) // B), -(-n_cols // B)
@@ -384,9 +467,9 @@ def block_ell_adj_from_csr(indptr, indices, data, n_cols: int,
         raise ValueError(
             f"k_slots={Kt} drops non-zero tiles (need {need_t})")
     blocks, cols = _scatter_tiles(present, rb, cb, rlo, clo, data, K, B,
-                                  uniq_coords)
+                                  uniq_coords, pool=pool)
     blocks_t, cols_t = _scatter_tiles(present.T, cb, rb, clo, rlo, data,
-                                      Kt, B, uniq_coords)
+                                      Kt, B, uniq_coords, pool=pool)
     return BlockEllAdj(blocks=blocks, block_cols=cols,
                        blocks_t=blocks_t, block_cols_t=cols_t)
 
@@ -408,6 +491,14 @@ def spmm(adj, x: jnp.ndarray, *, mode: Mode = "auto",
         through the Pallas interpreter for CPU validation).
       * `x` is `(n, F)`; the result is `(n, F)` in `x`'s dtype. `F`
         need not divide `block_f` — the sparse path pads internally.
+      * Precision: matmul OPERANDS run in x's dtype (a bf16 x pulls the
+        adjacency tiles down to bf16 — half the HBM traffic) while the
+        ACCUMULATOR is always fp32 (`preferred_element_type` on the
+        dense/XLA dots, the fp32 VMEM scratch in the Pallas kernel) —
+        the bf16-tiles/fp32-accumulator contract of the precision
+        policy (repro.core.precision), identical on the forward and the
+        custom-VJP transpose path. With fp32 x everything is a no-op
+        and the fp32 result is bitwise-unchanged.
       * Differentiable in both operands on the dense path; on the
         sparse path d x = Âᵀ ḡ runs on the host-built transposed tiles
         (a dense Â is never materialized in either direction) and the
@@ -422,12 +513,14 @@ def spmm(adj, x: jnp.ndarray, *, mode: Mode = "auto",
     format can never silently change the model math."""
     if isinstance(adj, BlockEllAdj):
         return spmm_ell(adj, x, impl=_resolve_spmm(mode), block_f=block_f)
-    return adj @ x
+    return spmm_dense(adj, x)
 
 
 def spmm_dense(adj: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
-    """Dense fallback used by ClusterBatch forward (XLA matmul)."""
-    return adj @ x
+    """Dense path: XLA matmul in x's dtype with an fp32 accumulator
+    (bitwise-identical to the plain `adj @ x` when everything is fp32)."""
+    return jnp.matmul(adj.astype(x.dtype), x,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
 
 
 # ----------------------------------------------------------------------

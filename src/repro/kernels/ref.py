@@ -20,11 +20,16 @@ def spmm_block_ell_ref(blocks: jnp.ndarray, block_cols: jnp.ndarray,
     sparse path above 1× dense in BENCH_spmm.json)."""
     nrb, K, B, _ = blocks.shape
     F = x.shape[1]
+    # precision contract (repro.core.precision): operands in x's dtype
+    # (fp32 x keeps the exact pre-policy fp32 casts), accumulator fp32
+    # via preferred_element_type, result cast back to x's dtype
+    op_dtype = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) \
+        else jnp.float32
     xb = x.reshape(-1, B, F)                      # (ncb, B, F)
     gathered = xb[block_cols].reshape(nrb, K * B, F)
     a = blocks.transpose(0, 2, 1, 3).reshape(nrb, B, K * B)
-    y = jax.lax.dot_general(a.astype(jnp.float32),
-                            gathered.astype(jnp.float32),
+    y = jax.lax.dot_general(a.astype(op_dtype),
+                            gathered.astype(op_dtype),
                             (((2,), (1,)), ((0,), (0,))),
                             preferred_element_type=jnp.float32)
     return y.reshape(nrb * B, F).astype(x.dtype)
