@@ -17,6 +17,14 @@ being slower or faster than the machine that committed the baseline;
 peak-memory reduction, whose temp-bytes inputs depend only on the
 compiler); rows without either fall back to wall-clock seconds, which
 only makes sense when both files come from comparable machines.
+
+Bootstrapping: a MISSING baseline file is not a regression — a fresh
+branch (or a repo that never committed BENCH_*.json) has nothing to
+compare against, so the gate prints a notice and exits 0. The NEW file
+is the thing this very CI run just produced, so its absence is a real
+failure. Malformed rows (no "name", or none of the comparable metrics)
+name the file, the missing key, and the regeneration command instead of
+dying with a raw KeyError.
 """
 from __future__ import annotations
 
@@ -24,15 +32,47 @@ import argparse
 import json
 import sys
 
+REGEN_HINT = ("regenerate it with `python -m benchmarks.bench_spmm "
+              "--quick --out BENCH_spmm.json` (see benchmarks/README "
+              "header in bench_spmm.py)")
 
-def _index(path: str) -> dict:
-    with open(path) as f:
-        doc = json.load(f)
-    return {r["name"]: r for r in doc.get("rows", [])}
+
+class GateError(Exception):
+    """Malformed input to the gate — not a perf regression."""
+
+
+def _index(path: str, role: str) -> dict:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except json.JSONDecodeError as e:
+        raise GateError(f"{role} file {path} is not valid JSON ({e}) — "
+                        f"{REGEN_HINT}") from e
+    if not isinstance(doc, dict) or "rows" not in doc:
+        raise GateError(f"{role} file {path} has no 'rows' key — it is "
+                        f"not a bench_spmm output; {REGEN_HINT}")
+    rows = {}
+    for i, r in enumerate(doc["rows"]):
+        if not isinstance(r, dict) or "name" not in r:
+            raise GateError(f"{role} file {path}: rows[{i}] has no "
+                            f"'name' key — not a bench row; {REGEN_HINT}")
+        rows[r["name"]] = r
+    return rows
+
+
+def _metric(row: dict, path: str, name: str) -> tuple[str, float, bool]:
+    """(metric key, value, higher_is_better) for a row, or GateError."""
+    for key, higher in (("speedup_vs_dense", True), ("ratio", True),
+                        ("seconds", False)):
+        if key in row:
+            return key, float(row[key]), higher
+    raise GateError(
+        f"{path}: row {name!r} carries none of speedup_vs_dense / ratio "
+        f"/ seconds, so there is nothing to compare — {REGEN_HINT}")
 
 
 def check(baseline: str, new: str, keys: list[str], tol: float) -> list[str]:
-    old_rows, new_rows = _index(baseline), _index(new)
+    old_rows, new_rows = _index(baseline, "baseline"), _index(new, "new")
     errors, guarded = [], []
     for key in keys:
         # every requested guard must resolve — a renamed/misspelled row
@@ -40,41 +80,38 @@ def check(baseline: str, new: str, keys: list[str], tol: float) -> list[str]:
         if key in old_rows:
             guarded.append(key)
         else:
-            errors.append(f"--rows key {key!r} not in baseline {baseline}")
+            errors.append(
+                f"--rows key {key!r} not in baseline {baseline} "
+                f"(have: {sorted(old_rows) or 'no rows at all'})")
     for name in guarded:
         if name not in new_rows:
             errors.append(f"{name}: row disappeared from {new}")
             continue
         old, cur = old_rows[name], new_rows[name]
-        if "speedup_vs_dense" in old and "speedup_vs_dense" in cur:
-            lo = old["speedup_vs_dense"] * (1.0 - tol)
-            if cur["speedup_vs_dense"] < lo:
-                errors.append(
-                    f"{name}: speedup_vs_dense {cur['speedup_vs_dense']} "
-                    f"< {lo:.2f} (baseline {old['speedup_vs_dense']} "
-                    f"- {tol:.0%})")
+        key, old_v, higher = _metric(old, baseline, name)
+        if key not in cur:
+            # compare like with like: a metric present in the baseline
+            # but dropped from the fresh run is a schema regression
+            errors.append(f"{name}: baseline compares on {key!r} but the "
+                          f"fresh row in {new} has no such key")
+            continue
+        cur_v = float(cur[key])
+        if higher:
+            lo = old_v * (1.0 - tol)
+            if cur_v < lo:
+                errors.append(f"{name}: {key} {cur_v} < {lo:.2f} "
+                              f"(baseline {old_v} - {tol:.0%})")
             else:
-                print(f"ok {name}: speedup_vs_dense "
-                      f"{cur['speedup_vs_dense']} vs baseline "
-                      f"{old['speedup_vs_dense']} (tol {tol:.0%})")
-        elif "ratio" in old and "ratio" in cur:
-            lo = old["ratio"] * (1.0 - tol)
-            if cur["ratio"] < lo:
-                errors.append(
-                    f"{name}: ratio {cur['ratio']} < {lo:.2f} "
-                    f"(baseline {old['ratio']} - {tol:.0%})")
-            else:
-                print(f"ok {name}: ratio {cur['ratio']} vs baseline "
-                      f"{old['ratio']} (tol {tol:.0%})")
+                print(f"ok {name}: {key} {cur_v} vs baseline {old_v} "
+                      f"(tol {tol:.0%})")
         else:
-            hi = old["seconds"] * (1.0 + tol)
-            if cur["seconds"] > hi:
-                errors.append(
-                    f"{name}: {cur['seconds']:.6f}s > {hi:.6f}s "
-                    f"(baseline {old['seconds']:.6f}s + {tol:.0%})")
+            hi = old_v * (1.0 + tol)
+            if cur_v > hi:
+                errors.append(f"{name}: {cur_v:.6f}s > {hi:.6f}s "
+                              f"(baseline {old_v:.6f}s + {tol:.0%})")
             else:
-                print(f"ok {name}: {cur['seconds']:.6f}s vs baseline "
-                      f"{old['seconds']:.6f}s (tol {tol:.0%})")
+                print(f"ok {name}: {cur_v:.6f}s vs baseline "
+                      f"{old_v:.6f}s (tol {tol:.0%})")
     return errors
 
 
@@ -87,7 +124,26 @@ def main():
                     help="exact row names to guard")
     ap.add_argument("--tol", type=float, default=0.25)
     args = ap.parse_args()
-    errors = check(args.baseline, args.new, args.rows, args.tol)
+    try:
+        open(args.baseline).close()
+    except OSError:
+        # bootstrapping: no committed baseline yet (fresh branch / first
+        # bench ever) — nothing to regress against is not a regression
+        print(f"NOTICE: baseline {args.baseline} does not exist — "
+              f"skipping the perf gate (commit a baseline to arm it; "
+              f"{REGEN_HINT})")
+        sys.exit(0)
+    try:
+        if not _index(args.baseline, "baseline"):
+            # also bootstrapping: a baseline with an empty rows list is
+            # a placeholder, not a set of floors to enforce
+            print(f"NOTICE: baseline {args.baseline} has no rows — "
+                  f"skipping the perf gate ({REGEN_HINT})")
+            sys.exit(0)
+        errors = check(args.baseline, args.new, args.rows, args.tol)
+    except GateError as e:
+        print(f"GATE ERROR: {e}", file=sys.stderr)
+        sys.exit(1)
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     sys.exit(1 if errors else 0)

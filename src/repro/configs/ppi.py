@@ -91,6 +91,34 @@ def deep_tiny_spec() -> ExperimentSpec:
     return s
 
 
+def real_spec() -> ExperimentSpec:
+    """Table 4 PPI recipe on the REAL GraphSAGE PPI graph (56,944
+    nodes, 50 features, 121 labels) — the leaderboard run that compares
+    against the paper's 99.36 micro-F1. First use downloads and caches
+    the dataset (repro.graph.datasets); the partition is memoized in
+    the partition cache keyed on the dataset fingerprint."""
+    s = spec()
+    s.name = "ppi_real"
+    s.data = DataSpec(name="ppi_real")
+    return s
+
+
+def real_tiny_spec() -> ExperimentSpec:
+    """The REAL PPI graph under a CI-sized recipe: full data (real
+    graphs cannot be shrunk — data.scale must stay 1.0), but a narrow
+    model and few epochs so the nightly real-datasets lane trains end
+    to end in minutes on CPU. The micro-F1 floor this must clear is
+    asserted by the lane, not here."""
+    s = real_spec()
+    s.name = "ppi_real_tiny"
+    s.batch.clusters_per_batch = 2
+    s.model.hidden_dim = 128
+    s.model.num_layers = 2
+    s.run.epochs = 10
+    s.run.eval_every = 5
+    return s
+
+
 def tiny_saint_spec() -> ExperimentSpec:
     """ppi_tiny on the GraphSAINT node sampler instead of the cluster
     batcher — same graph/model/optimizer, partition-free i.i.d.

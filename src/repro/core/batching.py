@@ -330,9 +330,22 @@ class ClusterBatcher:
 
     # ------------------------------------------------------------------
     def _batch_nodes(self, cluster_ids: Sequence[int],
-                     count_overflow: bool = True) -> Array:
-        """Union of the chosen clusters' nodes, truncated to node_cap
-        (loudly, when counting) — the one place overflow is handled."""
+                     count_overflow: bool = True,
+                     rng_ctx: Tuple[int, int] = (0, 0)) -> Array:
+        """Union of the chosen clusters' nodes, subsampled down to
+        node_cap on overflow (loudly, when counting) — the one place
+        overflow is handled.
+
+        Overflow is resolved by a UNIFORM subsample over the whole
+        union, seeded per (batcher seed, epoch, step) via `rng_ctx` —
+        not by truncating the concatenation, which would drop nodes
+        exclusively from the LAST cluster of the batch and
+        systematically bias training against later-drawn clusters.
+        The kept nodes preserve their concatenation order (clusters
+        stay contiguous, which is what gives block-ELL tiles their
+        fill), and the per-(seed, epoch, step) seeding keeps the epoch
+        stream a pure function of (seed, epoch) — resume fast-forward
+        stays bitwise-exact."""
         nodes = np.concatenate([self._members[t] for t in cluster_ids])
         if len(nodes) > self.node_cap:
             if not self.drop_overflow:
@@ -343,27 +356,48 @@ class ClusterBatcher:
                 if not self._overflow_warned:
                     self._overflow_warned = True
                     warnings.warn(
-                        f"ClusterBatcher dropped "
+                        f"ClusterBatcher subsampled away "
                         f"{len(nodes) - self.node_cap} overflow nodes "
                         f"(batch of {len(nodes)} > node_cap "
                         f"{self.node_cap}); raise node_cap or lower "
                         f"clusters_per_batch — cumulative count in "
                         f"padding_stats()['overflow_count']", stacklevel=3)
-            nodes = nodes[:self.node_cap]
+            epoch_idx, step = rng_ctx
+            rng = np.random.default_rng(
+                (self.seed, int(epoch_idx), int(step)))
+            keep = rng.choice(len(nodes), size=self.node_cap,
+                              replace=False)
+            nodes = nodes[np.sort(keep)]
         return nodes
 
-    def batch_csr(self, cluster_ids: Sequence[int]) -> Tuple[Array, Array,
-                                                             Array]:
+    def batch_csr(self, cluster_ids: Sequence[int], *,
+                  rng_ctx: Tuple[int, int] = (0, 0)
+                  ) -> Tuple[Array, Array, Array]:
         """Normalized CSR (indptr, indices, data) of the q-cluster union
         batch — the exact matrix batch_from_clusters turns into tiles
         (or a dense block). The K planner (repro.core.kslots) measures
-        THIS, so bucket choice and batch construction cannot drift."""
-        nodes = self._batch_nodes(cluster_ids, count_overflow=False)
+        THIS, so bucket choice and batch construction cannot drift;
+        `rng_ctx` is the (epoch, step) the batch would occupy, so the
+        overflow subsample matches the trained batch node-for-node."""
+        nodes = self._batch_nodes(cluster_ids, count_overflow=False,
+                                  rng_ctx=rng_ctx)
         return normalized_subgraph_csr(self.graph, nodes, self.norm,
                                        self.diag_lambda)
 
-    def batch_from_clusters(self, cluster_ids: Sequence[int]) -> ClusterBatch:
-        nodes = self._batch_nodes(cluster_ids)
+    def batch_from_clusters(self, cluster_ids: Sequence[int], *,
+                            rng_ctx: Tuple[int, int] = (0, 0)
+                            ) -> ClusterBatch:
+        """One-off payload build for the given clusters. Deliberately
+        POOL-FREE: this is the public entry point reachable from any
+        thread (stats probes, benchmarks, planning) while `epoch()`'s
+        stream — the only pooled path — may be running on a prefetch
+        producer thread, and TileBufferPool is single-threaded."""
+        return self._build(cluster_ids, rng_ctx=rng_ctx, tile_pool=None)
+
+    def _build(self, cluster_ids: Sequence[int], *,
+               rng_ctx: Tuple[int, int],
+               tile_pool) -> ClusterBatch:
+        nodes = self._batch_nodes(cluster_ids, rng_ctx=rng_ctx)
         return subgraph_payload(self.graph, nodes, node_cap=self.node_cap,
                                 norm=self.norm,
                                 diag_lambda=self.diag_lambda,
@@ -371,7 +405,7 @@ class ClusterBatcher:
                                 block_size=self.block_size,
                                 k_slots=self.k_slots, k_plan=self.k_plan,
                                 precompute_ax=self.precompute_ax,
-                                tile_pool=self._tile_pool)
+                                tile_pool=tile_pool)
 
     # ------------------------------------------------------------------
     def epoch(self, epoch_idx: int) -> Iterator[ClusterBatch]:
@@ -379,9 +413,12 @@ class ClusterBatcher:
         clusters without replacement (Algorithm 1). When q does not
         divide num_parts the final batch carries the num_parts % q
         trailing clusters (same padded fixed shape — dropping them would
-        silently skip those clusters every epoch)."""
-        for group in self._epoch_groups(epoch_idx):
-            yield self.batch_from_clusters(group)
+        silently skip those clusters every epoch). This stream is the
+        ONLY consumer of the batcher's tile pool — one producer thread
+        at a time (prefetch_iter runs at most one)."""
+        for step, group in enumerate(self._epoch_groups(epoch_idx)):
+            yield self._build(group, rng_ctx=(epoch_idx, step),
+                              tile_pool=self._tile_pool)
 
     def _epoch_groups(self, epoch_idx: int) -> Iterator[Array]:
         """The epoch's cluster groups — the deterministic (seed, epoch)
@@ -401,7 +438,8 @@ class ClusterBatcher:
         k_slots planner (repro.core.kslots) measures exactly what
         training will tile (Sampler protocol)."""
         groups = list(self._epoch_groups(0))[:max(1, n)]
-        return [self.batch_csr(g) for g in groups]
+        return [self.batch_csr(g, rng_ctx=(0, i))
+                for i, g in enumerate(groups)]
 
     # ------------------------------------------------------------------
     def padding_stats(self, sample_batches: int = 4) -> dict:

@@ -188,6 +188,10 @@ class SingleDeviceBackend:
     """The plain jit'd per-batch step (rng split inside the jit, exactly
     the pre-Engine single-device loop)."""
 
+    # one raw sampler payload in flight per step (Engine's pool-depth
+    # guard sizes tile-buffer lifetime off this)
+    group_size = 1
+
     def __init__(self, cfg: GCNConfig, opt: Optimizer,
                  spmm: Callable = spmm_dispatch):
         self.opt = opt
@@ -235,6 +239,10 @@ class ShardMapBackend:
         self.compression = compression
         self.dsize = int(mesh.shape[dp_axis])
         self.microbatches = max(1, int(microbatches))
+        # _dp_groups holds up to dsize*microbatches raw sampler payloads
+        # before the stack copies them — that whole group must outlive
+        # any tile-buffer recycling (Engine's pool-depth guard)
+        self.group_size = self.dsize * self.microbatches
         self._policy = policy_from_config(cfg)
         self._init_state = init_gcn_train_state
         self._step = make_gcn_train_step(
@@ -429,6 +437,33 @@ class Engine:
                 "layer 1 would silently skip propagation on raw "
                 "features. Rebuild the sampler with precompute_ax=True "
                 "(ExperimentSpec.build_batcher does this automatically).")
+        pool = getattr(batcher, "_tile_pool", None)
+        if pool is not None:
+            # TileBufferPool recycles a buffer after `depth` further
+            # same-key requests; each batch makes 2 requests per ring
+            # key (forward + transposed tiles share a key for square
+            # cap×cap batches), so the pool holds depth//2 live batches.
+            # Batches that must be simultaneously alive: the prefetch
+            # queue plus the in-flight and just-built ones (single
+            # device), or a full _dp_groups stack plus the one being
+            # built (data parallel — raw pooled payloads are only
+            # retained inside the group; firsts/stacks are copies).
+            group = int(getattr(backend, "group_size", 1))
+            need = group + 1 if group > 1 else int(prefetch) + 2
+            live = pool.depth // 2
+            if live < need:
+                raise ValueError(
+                    f"tile-buffer pool depth {pool.depth} holds only "
+                    f"{live} live batches but this run keeps {need} in "
+                    f"flight ("
+                    + (f"data-parallel group of {group} + 1 being built"
+                       if group > 1 else
+                       f"prefetch={int(prefetch)} queued + 2 in flight")
+                    + ") — recycled buffers would alias live payloads "
+                    f"and silently corrupt training. Deepen the pool "
+                    f"(TileBufferPool(depth={2 * need}) on the sampler), "
+                    f"lower execution.prefetch, or disable "
+                    f"batch.reuse_tile_buffers.")
         self.batcher = batcher
         self.cfg = cfg
         self.backend = backend

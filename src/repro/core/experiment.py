@@ -89,10 +89,24 @@ def _f(default: Any, doc: str) -> Any:
 class DataSpec:
     """Which graph to materialize (repro.graph.generators.make_dataset)."""
     name: str = _f("ppi", "dataset name in the generator registry: "
-                   "ppi, reddit, amazon2m, cora, structural")
+                   "synthetic ppi, reddit, amazon2m, cora, structural "
+                   "(seeded generators), or the real benchmarks "
+                   "ppi_real, reddit_real, ogbn_arxiv, ogbn_products "
+                   "(downloaded + disk-cached, repro.graph.datasets)")
     scale: float = _f(1.0, "node-count multiplier on the paper-sized "
-                      "graph (*_tiny presets use small scales for CPU)")
-    seed: int = _f(0, "generator seed — one spec = one exact graph")
+                      "graph (*_tiny presets use small scales for CPU); "
+                      "must stay 1.0 for real datasets — real graphs "
+                      "cannot be resampled")
+    seed: int = _f(0, "generator seed — one spec = one exact graph "
+                   "(ignored by real datasets: their splits are fixed "
+                   "upstream)")
+    cache_dir: Optional[str] = _f(None, "real datasets only: dataset "
+                                  "cache root; None uses "
+                                  "$REPRO_DATASETS_CACHE or "
+                                  "~/.cache/repro-datasets")
+    mmap: bool = _f(True, "real datasets only: memory-map the processed "
+                    "feature matrix instead of loading it into RAM "
+                    "(Amazon2M-class features don't fit otherwise)")
 
 
 @dataclasses.dataclass
@@ -102,6 +116,14 @@ class PartitionSpec:
     num_parts: int = _f(50, "number of clusters p (paper Table 4)")
     method: str = _f("metis", "partitioner: metis, cluster or random")
     seed: int = _f(0, "partitioner seed")
+    cache: bool = _f(True, "memoize partition assignments to disk keyed "
+                     "on (graph fingerprint, num_parts, method, seed, "
+                     "partitioner version) — a METIS pass over a "
+                     "2M-node graph is minutes; `--set "
+                     "partition.cache=false` recomputes every run")
+    cache_dir: Optional[str] = _f(None, "partition cache directory; "
+                                  "None uses <dataset cache "
+                                  "root>/partitions")
 
 
 @dataclasses.dataclass
@@ -372,6 +394,12 @@ def validate(spec: ExperimentSpec) -> ExperimentSpec:
 
     check(spec.batch.sampler in _SAMPLERS, "batch.sampler",
           f"must be one of {_SAMPLERS}; got {spec.batch.sampler!r}")
+    from repro.graph.datasets import REAL_DATASETS
+    check(spec.data.name.lower() not in REAL_DATASETS
+          or spec.data.scale == 1.0, "data.scale",
+          f"must be 1.0 for the real dataset {spec.data.name!r} — real "
+          f"graphs cannot be resampled (*_real_tiny presets shrink the "
+          f"recipe, not the data)")
     bud = spec.batch.budget
     check(bud is None or bud >= 1, "batch.budget", "must be None or >= 1")
     bpe = spec.batch.batches_per_epoch
@@ -419,13 +447,18 @@ def validate(spec: ExperimentSpec) -> ExperimentSpec:
 # ----------------------------------------------------------------------
 def build_graph(spec: ExperimentSpec) -> CSRGraph:
     return make_dataset(spec.data.name, scale=spec.data.scale,
-                        seed=spec.data.seed)
+                        seed=spec.data.seed,
+                        cache_dir=spec.data.cache_dir,
+                        mmap=spec.data.mmap)
 
 
 def build_partition(spec: ExperimentSpec, graph: CSRGraph):
+    # explicit cache_dir wins; cache=True → default dir; cache=False off
+    cache = (spec.partition.cache_dir if spec.partition.cache_dir
+             else spec.partition.cache)
     return partition_graph(graph, spec.partition.num_parts,
                            method=spec.partition.method,
-                           seed=spec.partition.seed)
+                           seed=spec.partition.seed, cache=cache)
 
 
 def default_saint_budget(spec: ExperimentSpec, graph: CSRGraph) -> int:
@@ -632,11 +665,15 @@ _PRESETS: Dict[str, Union[str, Callable[[], ExperimentSpec]]] = {
     "ppi_tiny": "repro.configs.ppi:tiny_spec",
     "ppi_tiny_saint": "repro.configs.ppi:tiny_saint_spec",
     "ppi_deep_tiny": "repro.configs.ppi:deep_tiny_spec",
+    "ppi_real": "repro.configs.ppi:real_spec",
+    "ppi_real_tiny": "repro.configs.ppi:real_tiny_spec",
     "reddit": "repro.configs.reddit:spec",
     "reddit_tiny": "repro.configs.reddit:tiny_spec",
     "reddit_tiny_saint": "repro.configs.reddit:tiny_saint_spec",
+    "reddit_real": "repro.configs.reddit:real_spec",
     "amazon2m": "repro.configs.amazon2m:spec",
     "amazon2m_tiny": "repro.configs.amazon2m:tiny_spec",
+    "amazon2m_real": "repro.configs.amazon2m:real_spec",
 }
 
 

@@ -176,9 +176,30 @@ def copurchase_graph(spec: CoPurchaseSpec) -> CSRGraph:
                                val_mask=np.zeros(n, bool), test_mask=test_mask)
 
 
-# Named dataset registry mirroring the paper's Table 3 (scaled for CPU).
-def make_dataset(name: str, scale: float = 1.0, seed: int = 0) -> CSRGraph:
+# Named dataset registry mirroring the paper's Table 3 (scaled for CPU),
+# plus the real benchmark datasets (repro.graph.datasets) under their
+# *_real / ogbn_* names.
+def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
+                 cache_dir: str | None = None,
+                 mmap: bool = True) -> CSRGraph:
+    """One registry for every graph a spec can name. Synthetic names
+    (ppi, reddit, amazon2m, cora, structural) are seeded generators and
+    honor `scale`; real names (ppi_real, reddit_real, ogbn_arxiv,
+    ogbn_products) load the actual benchmark through the disk cache
+    (`cache_dir`/`mmap` — repro.graph.datasets) and reject scale != 1
+    loudly: real data cannot be resampled, *_tiny recipes shrink the
+    model/epochs instead. `seed` is ignored for real datasets (their
+    splits are fixed upstream)."""
     name = name.lower()
+    from repro.graph.datasets import REAL_DATASETS, load_dataset
+    if name in REAL_DATASETS:
+        if scale != 1.0:
+            raise ValueError(
+                f"data.scale={scale} is not applicable to the real "
+                f"dataset {name!r} — real graphs cannot be resampled; "
+                f"keep scale=1.0 (the *_real_tiny presets shrink the "
+                f"recipe, not the data)")
+        return load_dataset(name, cache_dir=cache_dir, mmap=mmap)
     if name == "ppi":  # multi-label, dense-ish
         return stochastic_block_model(SBMSpec(
             num_nodes=max(256, int(14_000 * scale)), num_communities=50,

@@ -99,6 +99,10 @@ def main(argv=None) -> int:
         sampler_desc = (f"{spec.partition.num_parts} parts "
                         f"(within "
                         f"{exp.partition_stats.within_fraction:.1%})")
+        if exp.partition_stats.cached is not None:
+            sampler_desc += (", partition cache "
+                             + ("hit" if exp.partition_stats.cached
+                                else "miss"))
     else:    # partition-free SAINT sampler
         sampler_desc = (f"{spec.batch.sampler} sampler "
                         f"(budget {exp.batcher.budget})")

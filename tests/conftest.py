@@ -15,6 +15,23 @@ _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, _SRC)
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _isolated_dataset_cache(tmp_path_factory):
+    """Point the dataset + partition caches (repro.graph.datasets
+    cache_root — partition_graph's default cache dir lives under it) at
+    a per-session temp dir so tests never read or pollute the user's
+    ~/.cache/repro-datasets. Set via os.environ (not monkeypatch) so
+    subprocess tests inherit it too."""
+    root = tmp_path_factory.mktemp("repro-datasets-cache")
+    old = os.environ.get("REPRO_DATASETS_CACHE")
+    os.environ["REPRO_DATASETS_CACHE"] = str(root)
+    yield root
+    if old is None:
+        os.environ.pop("REPRO_DATASETS_CACHE", None)
+    else:
+        os.environ["REPRO_DATASETS_CACHE"] = old
+
+
 @pytest.fixture
 def run_distributed():
     """Run `code` in a subprocess with a forced multi-device CPU host.

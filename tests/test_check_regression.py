@@ -1,0 +1,113 @@
+"""benchmarks/check_regression.py CLI contract: bootstrapping (missing
+or empty baseline) is a notice + exit 0, malformed inputs fail with
+actionable messages naming the file/key/regeneration command, and real
+regressions still exit 1."""
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                      "check_regression.py")
+
+
+def _run(*args):
+    return subprocess.run([sys.executable, SCRIPT, *args],
+                          capture_output=True, text=True, timeout=60)
+
+
+def _write(path, rows):
+    path.write_text(json.dumps({"rows": rows}))
+    return str(path)
+
+
+ROW = "table6/F128/block-ell-vjp-fwdbwd"
+
+
+def test_ok_pass_and_regression_fail(tmp_path):
+    base = _write(tmp_path / "base.json",
+                  [{"name": ROW, "speedup_vs_dense": 4.0}])
+    good = _write(tmp_path / "good.json",
+                  [{"name": ROW, "speedup_vs_dense": 3.9}])
+    bad = _write(tmp_path / "bad.json",
+                 [{"name": ROW, "speedup_vs_dense": 1.0}])
+    assert _run(base, good).returncode == 0
+    out = _run(base, bad)
+    assert out.returncode == 1 and "REGRESSION" in out.stderr
+
+
+def test_missing_baseline_is_bootstrapping_not_failure(tmp_path):
+    new = _write(tmp_path / "new.json", [{"name": ROW, "seconds": 1.0}])
+    out = _run(str(tmp_path / "does-not-exist.json"), new)
+    assert out.returncode == 0, out.stderr
+    assert "NOTICE" in out.stdout and "commit a baseline" in out.stdout
+
+
+def test_empty_baseline_rows_is_bootstrapping(tmp_path):
+    base = _write(tmp_path / "base.json", [])
+    new = _write(tmp_path / "new.json", [{"name": ROW, "seconds": 1.0}])
+    out = _run(base, new)
+    assert out.returncode == 0, out.stderr
+    assert "NOTICE" in out.stdout and "no rows" in out.stdout
+
+
+def test_missing_new_file_is_a_real_failure(tmp_path):
+    base = _write(tmp_path / "base.json",
+                  [{"name": ROW, "seconds": 1.0}])
+    out = _run(base, str(tmp_path / "never-produced.json"))
+    assert out.returncode != 0
+
+
+def test_baseline_without_rows_key_names_file_and_fix(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"something": "else"}))
+    new = _write(tmp_path / "new.json", [{"name": ROW, "seconds": 1.0}])
+    out = _run(str(base), new)
+    assert out.returncode == 1
+    assert "no 'rows' key" in out.stderr
+    assert str(base) in out.stderr
+    assert "bench_spmm" in out.stderr        # the regeneration command
+
+
+def test_row_without_name_is_actionable_not_keyerror(tmp_path):
+    base = _write(tmp_path / "base.json", [{"seconds": 1.0}])
+    new = _write(tmp_path / "new.json", [{"name": ROW, "seconds": 1.0}])
+    out = _run(base, new)
+    assert out.returncode == 1
+    assert "KeyError" not in out.stderr
+    assert "no 'name' key" in out.stderr and "rows[0]" in out.stderr
+
+
+def test_row_without_any_metric_is_actionable(tmp_path):
+    base = _write(tmp_path / "base.json", [{"name": ROW}])
+    new = _write(tmp_path / "new.json", [{"name": ROW, "seconds": 1.0}])
+    out = _run(base, new)
+    assert out.returncode == 1
+    assert "KeyError" not in out.stderr
+    assert "nothing to compare" in out.stderr
+
+
+def test_invalid_json_is_actionable(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text("{not json")
+    new = _write(tmp_path / "new.json", [{"name": ROW, "seconds": 1.0}])
+    out = _run(str(base), new)
+    assert out.returncode == 1 and "not valid JSON" in out.stderr
+
+
+def test_unknown_rows_key_lists_available(tmp_path):
+    base = _write(tmp_path / "base.json",
+                  [{"name": "other/row", "seconds": 1.0}])
+    new = _write(tmp_path / "new.json",
+                 [{"name": "other/row", "seconds": 1.0}])
+    out = _run(base, new, "--rows", "misspelled/row")
+    assert out.returncode == 1
+    assert "not in baseline" in out.stderr and "other/row" in out.stderr
+
+
+def test_metric_dropped_in_new_row_fails(tmp_path):
+    base = _write(tmp_path / "base.json",
+                  [{"name": ROW, "speedup_vs_dense": 4.0}])
+    new = _write(tmp_path / "new.json", [{"name": ROW, "seconds": 9.9}])
+    out = _run(base, new)
+    assert out.returncode == 1 and "no such key" in out.stderr

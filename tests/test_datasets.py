@@ -1,0 +1,261 @@
+"""Real-dataset ingestion (repro.graph.datasets): the full download →
+checksum → extract → parse → processed-cache → mmap pipeline, exercised
+OFFLINE against fixture archives in the exact on-disk formats of the
+real distributions (GraphSAGE PPI zip, DGL Reddit npz zip, OGB csv.gz
+zip), served through $REPRO_DATASETS_MIRROR's file:// support."""
+import gzip
+import io
+import json
+import pathlib
+import shutil
+import zipfile
+
+import numpy as np
+import pytest
+
+from repro.core.engine import resolve_eval_mask
+from repro.graph.datasets import (REAL_DATASETS, cache_root, dataset_meta,
+                                  load_dataset)
+from repro.graph.generators import make_dataset
+
+N_PPI, N_REDDIT, N_OGB = 120, 90, 80
+
+
+def _community_edges(rng, comm, per_node=3):
+    srcs, dsts = [], []
+    for node in range(len(comm)):
+        same = np.where(comm == comm[node])[0]
+        nb = rng.choice(same, size=per_node)
+        srcs.extend([node] * per_node)
+        dsts.extend(int(x) for x in nb)
+    return np.asarray(srcs), np.asarray(dsts)
+
+
+def make_ppi_zip(path: pathlib.Path, n=N_PPI, f=10, c=6, seed=0):
+    """GraphSAGE layout: ppi-G.json node_link graph with per-node
+    val/test flags, ppi-feats.npy, ppi-class_map.json, ppi-id_map.json."""
+    rng = np.random.default_rng(seed)
+    comm = rng.integers(0, 4, size=n)
+    src, dst = _community_edges(rng, comm)
+    u = rng.random(n)
+    val, test = u > 0.8, (u > 0.65) & (u <= 0.8)
+    labels = np.zeros((n, c), np.int64)
+    labels[np.arange(n), comm % c] = 1
+    labels[rng.random((n, c)) < 0.1] = 1
+    feats = np.eye(4, f)[comm] + 0.1 * rng.normal(size=(n, f))
+    G = {"directed": False, "multigraph": False,
+         "nodes": [{"id": i, "val": bool(val[i]), "test": bool(test[i])}
+                   for i in range(n)],
+         "links": [{"source": int(s), "target": int(d)}
+                   for s, d in zip(src, dst)]}
+    feats_buf = io.BytesIO()
+    np.save(feats_buf, feats.astype(np.float32))
+    with zipfile.ZipFile(path, "w") as z:
+        z.writestr("ppi-G.json", json.dumps(G))
+        z.writestr("ppi-id_map.json",
+                   json.dumps({str(i): i for i in range(n)}))
+        z.writestr("ppi-class_map.json",
+                   json.dumps({str(i): labels[i].tolist()
+                               for i in range(n)}))
+        z.writestr("ppi-feats.npy", feats_buf.getvalue())
+    return val, test
+
+
+def make_reddit_zip(path: pathlib.Path, n=N_REDDIT, f=8, c=5, seed=1):
+    """DGL layout: reddit_data.npz (feature/label/node_types with
+    1=train 2=val 3=test) + reddit_graph.npz (scipy sparse)."""
+    import scipy.sparse as sp
+    rng = np.random.default_rng(seed)
+    comm = rng.integers(0, 3, size=n)
+    src, dst = _community_edges(rng, comm)
+    types = rng.choice([1, 1, 1, 2, 3], size=n).astype(np.int32)
+    data_buf, graph_buf = io.BytesIO(), io.BytesIO()
+    np.savez(data_buf,
+             feature=(np.eye(3, f)[comm]
+                      + 0.1 * rng.normal(size=(n, f))).astype(np.float32),
+             label=(comm % c).astype(np.int64), node_types=types)
+    adj = sp.coo_matrix((np.ones(len(src)), (src, dst)),
+                        shape=(n, n)).tocsr()
+    sp.save_npz(graph_buf, adj)
+    with zipfile.ZipFile(path, "w") as z:
+        z.writestr("reddit_data.npz", data_buf.getvalue())
+        z.writestr("reddit_graph.npz", graph_buf.getvalue())
+    return types
+
+
+def make_ogb_zip(path: pathlib.Path, n=N_OGB, f=6, c=4, seed=2,
+                 folder="arxiv", split="time"):
+    """OGB node-prop layout under a top-level folder: raw/{edge,
+    node-feat,node-label}.csv.gz + split/<split>/{train,valid,test}."""
+    rng = np.random.default_rng(seed)
+    comm = rng.integers(0, 3, size=n)
+    src, dst = _community_edges(rng, comm)
+    feats = np.eye(3, f)[comm] + 0.1 * rng.normal(size=(n, f))
+    order = rng.permutation(n)
+    tr, va, te = order[:n // 2], order[n // 2:3 * n // 4], order[3 * n // 4:]
+
+    def gz(lines):
+        return gzip.compress(("\n".join(lines) + "\n").encode())
+
+    with zipfile.ZipFile(path, "w") as z:
+        z.writestr(f"{folder}/raw/edge.csv.gz",
+                   gz([f"{s},{d}" for s, d in zip(src, dst)]))
+        z.writestr(f"{folder}/raw/node-feat.csv.gz",
+                   gz([",".join(f"{x:.6f}" for x in row)
+                       for row in feats]))
+        z.writestr(f"{folder}/raw/node-label.csv.gz",
+                   gz([str(int(x)) for x in comm % c]))
+        for name, idx in (("train", tr), ("valid", va), ("test", te)):
+            z.writestr(f"{folder}/split/{split}/{name}.csv.gz",
+                       gz([str(int(i)) for i in idx]))
+    return tr, va, te
+
+
+@pytest.fixture(scope="module")
+def mirror(tmp_path_factory):
+    """A file:// mirror directory holding fixture archives under the
+    exact filenames the registry downloads."""
+    d = tmp_path_factory.mktemp("mirror")
+    make_ppi_zip(d / "ppi.zip")
+    make_reddit_zip(d / "reddit.zip")
+    make_ogb_zip(d / "arxiv.zip", folder="arxiv", split="time")
+    return d
+
+
+@pytest.fixture
+def dataset_env(mirror, tmp_path, monkeypatch):
+    """Fresh cache root + the module-scoped mirror."""
+    cache = tmp_path / "cache"
+    monkeypatch.setenv("REPRO_DATASETS_CACHE", str(cache))
+    monkeypatch.setenv("REPRO_DATASETS_MIRROR", mirror.as_uri())
+    return cache
+
+
+# ----------------------------------------------------------------------
+# the three format parsers, end to end through the cache
+# ----------------------------------------------------------------------
+def test_ppi_real_pipeline_and_processed_cache(dataset_env):
+    g = load_dataset("ppi_real")
+    assert g.num_nodes == N_PPI
+    assert g.features.shape == (N_PPI, 10)
+    assert g.labels.shape[1] == 6 and g.labels.dtype == np.float32
+    assert g.train_mask.any() and g.val_mask.any() and g.test_mask.any()
+    # the three splits partition the nodes (train = ~(val|test))
+    assert not (g.train_mask & (g.val_mask | g.test_mask)).any()
+    # mmap=True serves features straight off disk
+    assert isinstance(g.features, np.memmap)
+    g2 = load_dataset("ppi_real", mmap=False)
+    assert not isinstance(g2.features, np.memmap)
+    np.testing.assert_array_equal(np.asarray(g.features), g2.features)
+    # processed cache hit: raw/ (archives AND extracted files) can go
+    shutil.rmtree(dataset_env / "ppi_real" / "raw")
+    g3 = load_dataset("ppi_real")
+    np.testing.assert_array_equal(g.indptr, g3.indptr)
+    meta = dataset_meta("ppi_real")
+    assert meta["num_nodes"] == N_PPI and meta["feature_dim"] == 10
+
+
+def test_reddit_real_pipeline(dataset_env):
+    g = load_dataset("reddit_real")
+    assert g.num_nodes == N_REDDIT
+    assert g.features.shape == (N_REDDIT, 8)
+    assert g.labels.ndim == 1          # multiclass
+    assert (int(g.train_mask.sum() + g.val_mask.sum()
+                + g.test_mask.sum()) == N_REDDIT)
+
+
+def test_ogb_pipeline(dataset_env):
+    g = load_dataset("ogbn_arxiv")
+    assert g.num_nodes == N_OGB
+    assert g.features.shape == (N_OGB, 6)
+    assert g.labels.ndim == 1
+    assert int(g.train_mask.sum()) == N_OGB // 2
+    assert not (g.train_mask & g.val_mask).any()
+    assert not (g.val_mask & g.test_mask).any()
+
+
+def test_real_masks_resolve_to_val_not_test(dataset_env):
+    """The paper's protocol evaluates on val during training; the real
+    loaders must wire a non-empty val_mask through so eval_split='auto'
+    never silently falls back to test."""
+    calls = []
+    for name in ("ppi_real", "reddit_real", "ogbn_arxiv"):
+        g = load_dataset(name)
+        split, mask = resolve_eval_mask(g, "auto", warner=calls.append)
+        assert split == "val" and mask.any()
+    assert calls == []
+
+
+# ----------------------------------------------------------------------
+# registry + make_dataset integration
+# ----------------------------------------------------------------------
+def test_make_dataset_serves_real_names(dataset_env):
+    g = make_dataset("ppi_real")
+    assert g.num_nodes == N_PPI
+
+
+def test_make_dataset_rejects_scale_on_real(dataset_env):
+    with pytest.raises(ValueError, match="cannot be resampled"):
+        make_dataset("ppi_real", scale=0.5)
+
+
+def test_unknown_real_dataset():
+    with pytest.raises(KeyError, match="unknown real dataset"):
+        load_dataset("nope_real")
+
+
+# ----------------------------------------------------------------------
+# checksum policy: trust-on-first-use
+# ----------------------------------------------------------------------
+def test_tofu_checksum_rejects_changed_upstream(tmp_path, monkeypatch):
+    own_mirror = tmp_path / "mirror"
+    own_mirror.mkdir()
+    make_ppi_zip(own_mirror / "ppi.zip", seed=0)
+    cache = tmp_path / "cache"
+    monkeypatch.setenv("REPRO_DATASETS_CACHE", str(cache))
+    monkeypatch.setenv("REPRO_DATASETS_MIRROR", own_mirror.as_uri())
+    load_dataset("ppi_real")    # records the first-seen sha256
+
+    # upstream silently changes; the local copies are gone but the
+    # recorded checksum survives — the re-download must be refused
+    make_ppi_zip(own_mirror / "ppi.zip", seed=99)
+    raw = cache / "ppi_real" / "raw"
+    db = (raw / "CHECKSUMS.json").read_text()
+    shutil.rmtree(raw)
+    shutil.rmtree(cache / "ppi_real" / "processed")
+    raw.mkdir(parents=True)
+    (raw / "CHECKSUMS.json").write_text(db)
+    with pytest.raises(ValueError, match="previously recorded"):
+        load_dataset("ppi_real")
+
+
+def test_missing_file_error_is_actionable(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_DATASETS_CACHE", str(tmp_path / "cache"))
+    monkeypatch.setenv("REPRO_DATASETS_MIRROR",
+                       (tmp_path / "empty").as_uri())
+    with pytest.raises(RuntimeError, match="REPRO_DATASETS_MIRROR"):
+        load_dataset("ppi_real")
+
+
+# ----------------------------------------------------------------------
+# end to end: the ppi_real preset machinery trains on the fixture
+# ----------------------------------------------------------------------
+def test_ppi_real_preset_trains_end_to_end(dataset_env):
+    from repro.core.experiment import (apply_overrides, build_experiment,
+                                       preset)
+    spec = preset("ppi_real_tiny")
+    # the fixture graph is 120 nodes; shrink the RECIPE (never the data)
+    apply_overrides(spec, {"partition.num_parts": 4,
+                           "batch.clusters_per_batch": 2,
+                           "model.hidden_dim": 16,
+                           "run.epochs": 2, "run.eval_every": 1})
+    exp = build_experiment(spec)
+    res = exp.fit()
+    assert len(res.history) == 2
+    assert all(np.isfinite(h["loss"]) for h in res.history)
+    assert all(h["eval_split"] == "val" for h in res.history)
+    # second build skips METIS via the partition cache
+    exp2 = build_experiment(spec)
+    assert exp.partition_stats.cached is False
+    assert exp2.partition_stats.cached is True
+    np.testing.assert_array_equal(exp.parts, exp2.parts)

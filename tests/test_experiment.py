@@ -170,6 +170,54 @@ def test_wrapper_uses_val_split_without_warning(recwarn):
                 if "fell back" in str(w.message)]
 
 
+def test_fallback_warning_fires_exactly_once_per_run():
+    """eval_every=1 over several epochs: the EvalHook resolves the
+    split every epoch but must warn on the FIRST fallback only —
+    once per run, not once per eval."""
+    import warnings
+    g = make_dataset("amazon2m", scale=0.0003, seed=0)  # empty val_mask
+    parts, _ = partition_graph(g, 4, method="metis", seed=0)
+    cfg = GCNConfig(in_dim=g.features.shape[1], hidden_dim=16,
+                    out_dim=int(g.labels.max()) + 1, num_layers=2)
+    batcher = ClusterBatcher(g, parts, clusters_per_batch=2, seed=0)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        res = train_cluster_gcn(g, batcher, cfg, adamw(1e-2),
+                                num_epochs=3, eval_every=1)
+    fell = [w for w in caught if "fell back" in str(w.message)]
+    assert len(fell) == 1, [str(w.message) for w in fell]
+    assert len(res.history) == 3
+    assert all(h["eval_split"] == "test" for h in res.history)
+
+
+def test_resolved_eval_split_survives_checkpoint_resume(tmp_path):
+    """The split 'auto' resolves to is part of the history record; a
+    kill + resume must restore the resolved name in the replayed rows
+    and keep recording the same one afterwards."""
+    import warnings
+    from repro.core import StopAtStepHook
+
+    def _spec():
+        s = preset("amazon2m_tiny")      # generator has empty val_mask
+        return apply_overrides(s, {
+            "run.eval_split": "auto", "run.eval_every": 1,
+            "run.epochs": 3, "model.hidden_dim": 16,
+            "run.checkpoint_dir": str(tmp_path / "ck")})
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        probe = build_experiment(_spec())
+        # stop inside epoch 1 so at least one eval'd epoch is replayed
+        killed = build_experiment(_spec(), extra_hooks=[
+            StopAtStepHook(probe.batcher.steps_per_epoch() + 1)])
+        killed.fit()
+        assert killed.engine.preempted
+        resumed = build_experiment(_spec())
+        r = resumed.fit(resume=True)
+    assert len(r.history) == 3
+    assert all(h["eval_split"] == "test" for h in r.history)
+
+
 # ----------------------------------------------------------------------
 # the CLI driver end-to-end (train → checkpoint → resume → eval)
 # ----------------------------------------------------------------------

@@ -1,0 +1,158 @@
+"""Overflow handling in ClusterBatcher: batches exceeding node_cap are
+resolved by a UNIFORM deterministic subsample over the whole cluster
+union, not by truncating the concatenation (which dropped nodes only
+from the batch's LAST cluster — a systematic bias against later-drawn
+clusters that skews training on real, size-skewed partitions)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import StopAtStepHook, build_experiment
+from repro.core.batching import ClusterBatcher
+from repro.core.experiment import (BatchSpec, DataSpec, ExperimentSpec,
+                                   ModelSpec, OptimSpec, PartitionSpec,
+                                   RunSpec, apply_overrides)
+from repro.graph.generators import make_dataset
+
+K = 5                  # clusters; the 256-node cora graph → ~51 each
+CAP = 64               # the K-cluster union (256) overflows by 192
+
+
+def _batcher(**kw):
+    g = make_dataset("cora", scale=0.05, seed=0)
+    parts = np.arange(g.num_nodes, dtype=np.int64) % K
+    defaults = dict(clusters_per_batch=K, node_cap=CAP, pad_multiple=1,
+                    seed=0, drop_overflow=True)
+    defaults.update(kw)
+    return ClusterBatcher(g, parts, **defaults), parts
+
+
+def test_overflow_drops_from_every_cluster_not_just_the_last():
+    """The old `nodes[:cap]` truncation could only ever drop nodes of
+    the trailing clusters of the concatenation; the subsample must
+    spread drops over ALL clusters across rng contexts."""
+    b, parts = _batcher()
+    ids = list(range(K))
+    union = np.concatenate([np.where(parts == t)[0] for t in ids])
+    dropped_clusters = set()
+    seen = set()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for epoch in range(5):
+            for step in range(5):
+                kept = b._batch_nodes(ids, count_overflow=False,
+                                      rng_ctx=(epoch, step))
+                assert len(kept) == CAP
+                assert set(kept) <= set(union)
+                # concatenation order is preserved (clusters stay
+                # contiguous — what gives block tiles their fill)
+                pos = {n: i for i, n in enumerate(union)}
+                assert (np.diff([pos[n] for n in kept]) > 0).all()
+                dropped_clusters |= set(parts[list(set(union) - set(kept))])
+                seen.add(tuple(kept))
+    assert dropped_clusters == set(range(K))
+    assert len(seen) > 1               # contexts actually differ
+
+
+def test_overflow_subsample_is_deterministic_per_context():
+    b, _ = _batcher()
+    ids = list(range(K))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        a = b._batch_nodes(ids, rng_ctx=(3, 7))
+        c = b._batch_nodes(ids, rng_ctx=(3, 7))
+        d = b._batch_nodes(ids, rng_ctx=(3, 8))
+    np.testing.assert_array_equal(a, c)
+    assert not np.array_equal(a, d)
+
+
+def test_planner_and_training_subsample_identically():
+    """batch_csr (what the k_slots planner measures, count_overflow
+    False) and the counting path (what training builds) must keep the
+    SAME nodes for the same rng context — planner/training drift here
+    would size tiles for batches training never constructs."""
+    b, _ = _batcher()
+    ids = list(range(K))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        counted = b._batch_nodes(ids, count_overflow=True, rng_ctx=(0, 2))
+        planned = b._batch_nodes(ids, count_overflow=False, rng_ctx=(0, 2))
+    np.testing.assert_array_equal(counted, planned)
+
+
+def test_overflow_warns_once_and_counts():
+    b, _ = _batcher()
+    over = b.graph.num_nodes - CAP
+    with pytest.warns(UserWarning, match="subsampled away"):
+        b._batch_nodes(list(range(K)), rng_ctx=(0, 0))
+    assert b.overflow_count == over
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")    # second overflow: no warning
+        b._batch_nodes(list(range(K)), rng_ctx=(0, 1))
+    assert b.overflow_count == 2 * over
+
+
+def test_epoch_stream_is_pure_function_of_seed_and_epoch():
+    """The subsample is seeded per (seed, epoch, step) — the epoch
+    stream stays reproducible, which resume fast-forward relies on."""
+    b1, _ = _batcher(clusters_per_batch=2, node_cap=32)
+    b2, _ = _batcher(clusters_per_batch=2, node_cap=32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for e in range(2):
+            for p1, p2 in zip(b1.epoch(e), b2.epoch(e)):
+                for x, y in zip(p1.astuple(), p2.astuple()):
+                    np.testing.assert_array_equal(np.asarray(x),
+                                                  np.asarray(y))
+
+
+# ----------------------------------------------------------------------
+# resume exactness under overflow (the acceptance-criteria lock)
+# ----------------------------------------------------------------------
+def _overflow_spec(**overrides) -> ExperimentSpec:
+    """cora_test with a node_cap low enough that batches overflow."""
+    spec = ExperimentSpec(
+        name="overflow_test",
+        data=DataSpec(name="cora", scale=0.3, seed=0),
+        partition=PartitionSpec(num_parts=5, method="metis", seed=0,
+                                cache=False),
+        batch=BatchSpec(clusters_per_batch=2, seed=0, node_cap=192,
+                        pad_multiple=64, drop_overflow=True),
+        model=ModelSpec(hidden_dim=16, num_layers=2, dropout=0.2,
+                        multilabel=False),
+        optim=OptimSpec(name="adamw", lr=1e-2),
+        run=RunSpec(epochs=4, seed=0, eval_every=4, eval_split="val"))
+    return apply_overrides(spec, overrides)
+
+
+def _strip_time(history):
+    return [{k: v for k, v in h.items() if k != "time"} for h in history]
+
+
+def _assert_params_equal(a, b):
+    import jax
+    same = jax.tree_util.tree_map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b)
+    assert all(jax.tree_util.tree_leaves(same))
+
+
+def test_resume_is_bitwise_exact_with_overflow(tmp_path):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        exp = build_experiment(_overflow_spec())
+        assert exp.batcher.steps_per_epoch() == 3
+        straight = exp.fit()
+        assert exp.batcher.overflow_count > 0, \
+            "spec must actually overflow for this test to mean anything"
+
+        ck = {"run.checkpoint_dir": str(tmp_path / "ck")}
+        killed = build_experiment(_overflow_spec(**ck),
+                                  extra_hooks=[StopAtStepHook(5)])
+        killed.fit()                      # killed mid-epoch 1
+        assert killed.engine.preempted
+
+        resumed = build_experiment(_overflow_spec(**ck))
+        r = resumed.fit(resume=True)
+    assert _strip_time(r.history) == _strip_time(straight.history)
+    _assert_params_equal(r.params, straight.params)

@@ -1,0 +1,101 @@
+"""Disk-memoized partitioning: partition_graph(cache=...) keyed on
+(graph fingerprint, num_parts, method, seed, PARTITIONER_VERSION,
+extra kwargs). No hypothesis dependency — test_partition.py skips
+entirely when that's absent, and the cache must stay tested."""
+import numpy as np
+import pytest
+
+from repro.graph import make_dataset, partition_graph
+
+
+def _graph(seed=0):
+    return make_dataset("cora", scale=0.3, seed=seed)
+
+
+def test_partition_cache_roundtrip(tmp_path):
+    g = _graph()
+    p1, s1 = partition_graph(g, 6, seed=0, cache=tmp_path)
+    assert s1.cached is False and s1.fingerprint
+    p2, s2 = partition_graph(g, 6, seed=0, cache=tmp_path)
+    assert s2.cached is True and s2.fingerprint == s1.fingerprint
+    np.testing.assert_array_equal(p1, p2)
+    # the recomputed quality stats agree with the fresh run's
+    assert s2.edge_cut == s1.edge_cut
+
+
+def test_partition_cache_disabled_by_default_and_by_false(tmp_path):
+    g = _graph()
+    _, s = partition_graph(g, 6, seed=0)
+    assert s.cached is None
+    _, s = partition_graph(g, 6, seed=0, cache=False)
+    assert s.cached is None
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_partition_cache_key_covers_every_input(tmp_path):
+    """Different num_parts / method / seed / kwargs / graph must all
+    miss — a hit served across any of these would be a wrong answer."""
+    g = _graph()
+    partition_graph(g, 6, seed=0, cache=tmp_path)
+    for kwargs in (dict(num_parts=7, seed=0),
+                   dict(num_parts=6, seed=1),
+                   dict(num_parts=6, seed=0, method="random"),
+                   dict(num_parts=6, seed=0, eps=0.3)):
+        num_parts = kwargs.pop("num_parts")
+        _, s = partition_graph(g, num_parts, cache=tmp_path, **kwargs)
+        assert s.cached is False, kwargs
+    _, s = partition_graph(_graph(seed=7), 6, seed=0, cache=tmp_path)
+    assert s.cached is False
+
+
+def test_partition_cache_key_is_versioned(tmp_path, monkeypatch):
+    """Bumping PARTITIONER_VERSION must invalidate every cached
+    assignment — old entries are keyed under the old version."""
+    from repro.graph import partition as pmod
+    g = _graph()
+    partition_graph(g, 6, seed=0, cache=tmp_path)
+    assert any(f"_v{pmod.PARTITIONER_VERSION}" in f.name
+               for f in tmp_path.iterdir())
+    monkeypatch.setattr(pmod, "PARTITIONER_VERSION",
+                        pmod.PARTITIONER_VERSION + 1)
+    _, s = partition_graph(g, 6, seed=0, cache=tmp_path)
+    assert s.cached is False
+
+
+def test_partition_cache_corrupt_entry_raises(tmp_path):
+    g = _graph()
+    partition_graph(g, 6, seed=0, cache=tmp_path)
+    entry = next(tmp_path.glob("*.npz"))
+    np.savez(entry, parts=np.zeros(3, np.int64))   # wrong length
+    with pytest.raises(RuntimeError, match="corrupt partition cache"):
+        partition_graph(g, 6, seed=0, cache=tmp_path)
+
+
+def test_partition_cache_unwritable_degrades_to_warning(tmp_path):
+    g = _graph()
+    blocked = tmp_path / "blocked"
+    blocked.write_text("a file where the cache dir should be")
+    with pytest.warns(UserWarning, match="continuing uncached"):
+        parts, s = partition_graph(g, 6, seed=0, cache=blocked)
+    assert s.cached is False and len(parts) == g.num_nodes
+
+
+def test_spec_partition_cache_wiring(tmp_path, monkeypatch):
+    """The spec layer: partition.cache=True (default) uses the shared
+    cache root; partition.cache=false is the escape hatch;
+    partition.cache_dir overrides the location."""
+    from repro.core.experiment import build_graph, build_partition, preset
+    monkeypatch.setenv("REPRO_DATASETS_CACHE", str(tmp_path / "root"))
+    spec = preset("ppi_tiny")
+    g = build_graph(spec)
+    _, s1 = build_partition(spec, g)
+    assert s1.cached is False
+    _, s2 = build_partition(spec, g)
+    assert s2.cached is True
+    assert (tmp_path / "root" / "partitions").is_dir()
+    spec.partition.cache = False
+    _, s3 = build_partition(spec, g)
+    assert s3.cached is None
+    spec.partition.cache_dir = str(tmp_path / "elsewhere")
+    _, s4 = build_partition(spec, g)
+    assert s4.cached is False and (tmp_path / "elsewhere").is_dir()

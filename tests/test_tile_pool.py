@@ -1,0 +1,97 @@
+"""TileBufferPool ownership: the pool is single-threaded by contract,
+so only the batcher's `epoch()` stream (one producer thread at a time)
+may use it. One-off/stats paths (batch_from_clusters, padding_stats,
+the k planner's sample_csrs) must be pool-free — a main-thread probe
+while a prefetch producer is mid-epoch must never alias the producer's
+live tile buffers. The Engine refuses outright when the pool's ring is
+too shallow for the number of batches a run keeps in flight."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.batching import ClusterBatcher
+from repro.core.prefetch import prefetch_iter
+from repro.graph.generators import make_dataset
+from repro.graph.partition import metis_like_partition
+
+
+def _pooled_batcher(**kw):
+    g = make_dataset("cora", scale=0.1, seed=0)
+    parts = metis_like_partition(g, 12, seed=0)
+    defaults = dict(clusters_per_batch=1, seed=0, sparse_adj=True,
+                    block_size=64, reuse_tile_buffers=True)
+    defaults.update(kw)
+    return ClusterBatcher(g, parts, **defaults)
+
+
+def _tree_copy(payload):
+    import jax
+    return jax.tree_util.tree_map(lambda x: np.copy(np.asarray(x)),
+                                  payload)
+
+
+def _assert_payload_equal(a, b, where):
+    import jax
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), where
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=where)
+
+
+def test_batch_from_clusters_is_pool_free():
+    """A one-off payload must stay bitwise-stable no matter how many
+    later builds run — it must NOT be backed by ring buffers that a
+    later build recycles."""
+    b = _pooled_batcher()
+    assert b._tile_pool is not None
+    first = b.batch_from_clusters([0]).astuple()
+    snapshot = _tree_copy(first)
+    for _ in range(3 * b._tile_pool.depth):       # enough to recycle
+        b.batch_from_clusters([1])
+        b.padding_stats()
+    _assert_payload_equal(first, snapshot, "one-off payload mutated "
+                          "by later builds — it came from the pool")
+
+
+def test_epoch_stream_uses_the_pool():
+    """The flip side: the epoch stream is the pooled path (that's the
+    whole point of reuse_tile_buffers)."""
+    b = _pooled_batcher()
+    list(b.epoch(0))
+    assert b._tile_pool._rings, "epoch() never touched the pool"
+
+
+def test_main_thread_probes_during_prefetch_are_safe():
+    """Threaded stress: while a prefetch producer thread streams pooled
+    epoch payloads, the main thread hammers padding_stats() and
+    batch_from_clusters() between pulls. Every streamed payload must be
+    bitwise-identical to a fresh pool-free batcher's stream — any
+    cross-thread pool sharing shows up as aliased/corrupted tiles."""
+    pooled = _pooled_batcher()
+    fresh = dataclasses.replace(pooled, reuse_tile_buffers=False)
+    reference = [p.astuple() for p in fresh.epoch(0)]
+    for trial in range(3):                 # thread timing varies
+        it = prefetch_iter(pooled.epoch(0), 2)
+        for i, payload in enumerate(it):
+            pooled.padding_stats(sample_batches=2)
+            pooled.batch_from_clusters([i % 12])
+            _assert_payload_equal(payload.astuple(), reference[i],
+                                  f"trial {trial} batch {i}")
+
+
+def test_engine_rejects_too_shallow_pool():
+    from repro.core.experiment import build_experiment, preset
+    spec = preset("ppi_tiny")
+    spec.batch.sparse_adj = True
+    spec.batch.reuse_tile_buffers = True
+    spec.execution.prefetch = 9     # needs 11 live batches; depth 8 → 4
+    with pytest.raises(ValueError, match="pool depth"):
+        build_experiment(spec)
+    spec.execution.prefetch = 2     # depth 8 → 4 live ≥ 2 + 2: fine
+    build_experiment(spec)
+    spec.batch.reuse_tile_buffers = False   # no pool → no constraint
+    spec.execution.prefetch = 9
+    build_experiment(spec)
