@@ -82,12 +82,16 @@ class Sampler(Protocol):
     SaintNodeSampler` / `SaintEdgeSampler` (GraphSAINT-style).
 
     Contract:
-      * `epoch(e)` yields exactly `steps_per_epoch()` fixed-shape
-        `ClusterBatch` payloads, and the stream is a pure function of
+      * `epoch(e, start_step=k)` yields the fixed-shape `ClusterBatch`
+        payloads of epoch e from step k on (all `steps_per_epoch()` of
+        them at the default k=0), and the stream is a pure function of
         (sampler config, e) — same config + epoch ⇒ bitwise-identical
         batches. That determinism is what makes `Engine.fit(resume=
-        True)` exact: skipping the first k payloads of epoch e
-        reproduces the tail of an unkilled run.
+        True)` exact, and `start_step` is the CHEAP fast-forward: the
+        skipped steps advance the epoch's rng stream without building
+        their payloads, bitwise-equivalent to build-and-discard
+        (locked by tests/test_engine.py) at a fraction of the cost —
+        resume and checkpoint-fallback re-fast-forward both ride it.
       * `sample_csrs(n)` returns the normalized batch CSR patterns of
         the FIRST n batches of epoch 0 (the same rng stream training
         sees) so the k_slots planner (repro.core.kslots) measures
@@ -107,7 +111,8 @@ class Sampler(Protocol):
     seed: int
     precompute_ax: bool
 
-    def epoch(self, epoch_idx: int) -> Iterator["ClusterBatch"]: ...
+    def epoch(self, epoch_idx: int,
+              start_step: int = 0) -> Iterator["ClusterBatch"]: ...
 
     def steps_per_epoch(self) -> int: ...
 
@@ -408,15 +413,24 @@ class ClusterBatcher:
                                 tile_pool=tile_pool)
 
     # ------------------------------------------------------------------
-    def epoch(self, epoch_idx: int) -> Iterator[ClusterBatch]:
+    def epoch(self, epoch_idx: int,
+              start_step: int = 0) -> Iterator[ClusterBatch]:
         """One pass over ALL clusters: shuffle, group into batches of q
         clusters without replacement (Algorithm 1). When q does not
         divide num_parts the final batch carries the num_parts % q
         trailing clusters (same padded fixed shape — dropping them would
         silently skip those clusters every epoch). This stream is the
         ONLY consumer of the batcher's tile pool — one producer thread
-        at a time (prefetch_iter runs at most one)."""
+        at a time (prefetch_iter runs at most one).
+
+        start_step=k skips the first k batches WITHOUT building their
+        payloads (the epoch permutation is drawn whole, so group
+        selection is free) — the cheap resume fast-forward of the
+        Sampler protocol; the surviving steps keep their original
+        rng_ctx, so the tail is bitwise the unskipped stream's."""
         for step, group in enumerate(self._epoch_groups(epoch_idx)):
+            if step < start_step:
+                continue
             yield self._build(group, rng_ctx=(epoch_idx, step),
                               tile_pool=self._tile_pool)
 

@@ -31,7 +31,11 @@ ExperimentSpec.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import inspect
+import math
+import signal as _signal
 import time
 import warnings
 from typing import (Any, Callable, Dict, Iterator, List, Optional, Protocol,
@@ -49,8 +53,15 @@ from repro.core.precision import (all_finite, init_scale_state,
 from repro.core.prefetch import prefetch_iter
 from repro.kernels.ops import spmm as spmm_dispatch
 from repro.nn.optim import Optimizer, apply_updates
+from repro.runtime import faults
+from repro.runtime.resilience import StragglerDetector
 
 PyTree = Any
+
+# fit() must NOT clear an externally-installed fault plan when the
+# engine itself has none (chaos tests install plans around fit), so the
+# no-plan path enters a null context instead of fault_scope(None)
+_NULL_CTX = contextlib.nullcontext()
 
 
 @dataclasses.dataclass
@@ -79,7 +90,7 @@ def make_train_step(cfg: GCNConfig, opt: Optimizer,
             updates, opt_state = opt.update(grads, opt_state, params)
             params = apply_updates(params, updates)
             return params, opt_state, rng, loss, aux
-        return jax.jit(step, donate_argnums=(0, 1))
+        return faults.wrap_step_faults(jax.jit(step, donate_argnums=(0, 1)))
 
     def scaled_loss(params, batch_tuple, sub, scale):
         loss, aux = gcn_loss(params, batch_tuple, cfg, train=True,
@@ -99,7 +110,7 @@ def make_train_step(cfg: GCNConfig, opt: Optimizer,
         opt_state = select_tree(finite, new_opt, opt_state)
         scale_state = update_scale_state(scale_state, finite, pol)
         return params, opt_state, rng, scale_state, loss, aux
-    return jax.jit(step, donate_argnums=(0, 1, 3))
+    return faults.wrap_step_faults(jax.jit(step, donate_argnums=(0, 1, 3)))
 
 
 def _dp_groups(batches, n: int):
@@ -427,7 +438,10 @@ class Engine:
     def __init__(self, batcher: Sampler, cfg: GCNConfig,
                  backend: StepBackend, *, epochs: int, seed: int = 0,
                  prefetch: int = 0, hooks: Sequence = (),
-                 checkpoint=None):
+                 checkpoint=None, fault_plan=None,
+                 max_consecutive_skipped: Optional[int] = None,
+                 divergence_factor: Optional[float] = None,
+                 prefetch_timeout: float = 600.0):
         if cfg.precompute_ax and not getattr(batcher, "precompute_ax",
                                              False):
             raise ValueError(
@@ -472,12 +486,37 @@ class Engine:
         self.prefetch = int(prefetch)
         self.hooks = list(hooks)
         self.checkpoint = checkpoint
+        # fault injection + divergence guards (runtime.faults /
+        # docs/robustness.md). All default OFF; the None paths add one
+        # global check per step — trajectories stay bitwise-identical
+        # (locked by tests/test_faults.py).
+        self.fault_plan = fault_plan
+        self.max_consecutive_skipped = (
+            None if max_consecutive_skipped is None
+            else int(max_consecutive_skipped))
+        self.divergence_factor = (None if divergence_factor is None
+                                  else float(divergence_factor))
+        self._guards_on = (self.max_consecutive_skipped is not None
+                           or self.divergence_factor is not None)
+        self.prefetch_timeout = float(prefetch_timeout)
+        self.diverged = False
+        self.straggler = StragglerDetector()
+        # does the sampler expose the cheap fast-forward seam
+        # (epoch(e, start_step=k))? Third-party Samplers may predate it.
+        try:
+            self._start_seam = "start_step" in inspect.signature(
+                self.batcher.epoch).parameters
+        except (TypeError, ValueError):
+            self._start_seam = False
         self.state: Optional[PyTree] = None
         self.history: List[Dict[str, float]] = []
         self.global_step = 0
         self.preempted = False
         self.stop_reason: Optional[str] = None
         self._stop = False
+        self._skip_stop_checkpoint = False
+        self._consec_nonfinite = 0
+        self._finite_losses: List[float] = []
         # current resume point: (epoch, step_in_epoch, losses, auxes)
         self._position: Tuple[int, int, list, list] = (0, 0, [], [])
 
@@ -515,7 +554,13 @@ class Engine:
     def _try_restore(self) -> bool:
         if self.checkpoint is None:
             return False
-        step = self.checkpoint.latest_step()
+        # newest VALID step: corrupt newer steps are quarantined with a
+        # warning and we land on the previous good one — fit() then
+        # re-fast-forwards the batch stream to wherever that is, which
+        # the (seed, epoch)-pure streams make exact
+        step = (self.checkpoint.latest_valid_step()
+                if hasattr(self.checkpoint, "latest_valid_step")
+                else self.checkpoint.latest_step())
         if step is None:
             return False
         template = self.init_state()
@@ -533,6 +578,68 @@ class Engine:
                           list(meta["losses"]),
                           [dict(a) for a in meta["auxes"]])
         return True
+
+    # -- divergence guards ----------------------------------------------
+    _GUARD_WINDOW = 32          # trailing finite losses the median sees
+    _GUARD_WARMUP = 8           # finite steps before the explosion guard arms
+
+    def _params_finite(self) -> bool:
+        return all(
+            bool(np.isfinite(np.asarray(jax.device_get(leaf))).all())
+            for leaf in jax.tree_util.tree_leaves(
+                self.backend.params(self.state)))
+
+    def _check_divergence(self, loss) -> None:
+        """Per-step guard, run only when a guard is configured (the
+        float() here forces a device sync — keeping the default path
+        free of it is part of the zero-cost guarantee)."""
+        lf = float(loss)
+        if not math.isfinite(lf):
+            self._consec_nonfinite += 1
+            lim = self.max_consecutive_skipped
+            if lim is not None and self._consec_nonfinite >= lim:
+                self._divergence_stop(
+                    f"{self._consec_nonfinite} consecutive non-finite "
+                    f"losses")
+            return
+        self._consec_nonfinite = 0
+        fac = self.divergence_factor
+        if fac is not None and len(self._finite_losses) >= \
+                self._GUARD_WARMUP:
+            w = self._finite_losses
+            med = sorted(w)[len(w) // 2]
+            if lf > fac * med:
+                # loss exploded: the params that produced it are suspect
+                # even if still finite — roll back to last-good
+                self._divergence_stop(
+                    f"loss {lf:.6g} exceeded {fac:g}x the trailing "
+                    f"median {med:.6g}", restore=True)
+                return
+        self._finite_losses.append(lf)
+        if len(self._finite_losses) > self._GUARD_WINDOW:
+            del self._finite_losses[0]
+
+    def _divergence_stop(self, reason: str, restore: bool = False) -> None:
+        """Abort cleanly: keep the current state when its params are
+        finite (the stop path's blocking save then persists it as
+        last-good), otherwise restore the newest valid checkpoint —
+        and never persist a poisoned state. The structured reason lands
+        in engine.stop_reason → metrics.json."""
+        self.diverged = True
+        if restore or not self._params_finite():
+            if self._try_restore():
+                reason += ("; restored the last-good checkpoint "
+                           f"(global step {self.global_step})")
+            else:
+                self._skip_stop_checkpoint = True
+                reason += ("; no valid checkpoint to restore — final "
+                           "state NOT saved")
+                warnings.warn(
+                    "divergence abort with no restorable checkpoint: "
+                    "the returned params are the diverged ones "
+                    "(configure run.checkpoint_dir to get rollback)",
+                    stacklevel=3)
+        self.request_stop(reason=f"divergence: {reason}")
 
     # -- hook plumbing --------------------------------------------------
     def _fire(self, name: str, *args) -> None:
@@ -565,7 +672,23 @@ class Engine:
         With resume=True but nothing restorable (no manager, or an
         empty directory) it warns and cold-starts; a checkpoint written
         by a bare CheckpointManager.save (no Engine metadata) raises
-        instead of silently restarting the epoch."""
+        instead of silently restarting the epoch.
+
+        Robustness plumbing (docs/robustness.md): `fault_plan` is
+        installed for the duration of fit (sites fire inside the step
+        wrappers, prefetch and checkpoint writes); when the sampler has
+        the `epoch(e, start_step=k)` seam and the backend consumes one
+        raw batch per step, the fast-forward skips batch CONSTRUCTION
+        instead of building-and-discarding, and a silently-crashed
+        prefetch producer is rebuilt once from the same seam; the
+        divergence guards (`max_consecutive_skipped`,
+        `divergence_factor`) stop the run with a structured
+        `stop_reason` instead of training on garbage."""
+        with faults.fault_scope(self.fault_plan) \
+                if self.fault_plan is not None else _NULL_CTX:
+            return self._fit(resume)
+
+    def _fit(self, resume: bool) -> TrainResult:
         restored = resume and self._try_restore()
         if resume and not restored:
             warnings.warn(
@@ -581,29 +704,54 @@ class Engine:
             self._position = (0, 0, [], [])
         self._stop = False
         self.preempted = False
+        self.diverged = False
         self.stop_reason = None
+        self._skip_stop_checkpoint = False
+        self._consec_nonfinite = 0
+        self._finite_losses = []
         start_epoch, skip_steps, losses, auxes = self._position
+        # one raw batch per step → the sampler's start_step seam maps
+        # 1:1 onto stream positions (a DP backend groups/stacks batches,
+        # so it keeps the build-and-discard path)
+        seam = (self._start_seam
+                and int(getattr(self.backend, "group_size", 1)) == 1)
 
         transfer = jax.device_put if self.prefetch > 0 else None
         t0 = time.perf_counter()
+        fit_error: Optional[BaseException] = None
         try:
             # inside the try so a raising on_fit_start hook still gets
             # on_fit_end cleanup (e.g. PreemptionHook's signal handlers)
             self._fire("on_fit_start")
             for epoch in range(start_epoch, self.epochs):
-                stream = self.backend.stream(
-                    b.astuple() for b in self.batcher.epoch(epoch))
-                step_in_epoch = 0
-                if skip_steps:
-                    # fast-forward a resumed mid-epoch position: the
-                    # stream is a pure function of (batcher seed, epoch),
-                    # so discarding the first k payloads reproduces the
-                    # remaining sequence exactly
+                start = skip_steps if (skip_steps and seam) else 0
+                raw = (self.batcher.epoch(epoch, start_step=start)
+                       if start else self.batcher.epoch(epoch))
+                stream = self.backend.stream(b.astuple() for b in raw)
+                step_in_epoch = start
+                if skip_steps and not start:
+                    # fast-forward a resumed mid-epoch position the slow
+                    # way (no seam / DP grouping): the stream is a pure
+                    # function of (batcher seed, epoch), so discarding
+                    # the first k payloads reproduces the tail exactly
                     for _ in range(skip_steps):
                         next(stream, None)
-                    step_in_epoch, skip_steps = skip_steps, 0
-                for payload in prefetch_iter(stream, self.prefetch,
-                                             transfer=transfer):
+                    step_in_epoch = skip_steps
+                skip_steps = 0
+                rebuild = None
+                if seam and self.prefetch > 0:
+                    # one-shot producer restart after a silent prefetch
+                    # crash: rebuild the epoch tail right after the
+                    # `consumed` payloads already trained on
+                    def rebuild(consumed, _e=epoch, _s=step_in_epoch):
+                        return (b.astuple() for b in self.batcher.epoch(
+                            _e, start_step=_s + consumed))
+                flagged = 0
+                for payload in prefetch_iter(
+                        stream, self.prefetch, transfer=transfer,
+                        hang_timeout=self.prefetch_timeout,
+                        rebuild=rebuild):
+                    t_step = time.perf_counter()
                     self.state, loss, aux = self.backend.step(self.state,
                                                               payload)
                     losses.append(loss)
@@ -611,6 +759,16 @@ class Engine:
                     self.global_step += 1
                     step_in_epoch += 1
                     self._position = (epoch, step_in_epoch, losses, auxes)
+                    if self.straggler.flag_step(
+                            time.perf_counter() - t_step):
+                        flagged += 1
+                    if self._guards_on:
+                        self._check_divergence(loss)
+                    if faults.maybe_fail("sigterm.at_step",
+                                         index=self.global_step):
+                        # after the step completed, before hooks see it —
+                        # exactly where a scheduler's kill usually lands
+                        _signal.raise_signal(_signal.SIGTERM)
                     self._fire("on_step", {"epoch": epoch,
                                            "step_in_epoch": step_in_epoch,
                                            "global_step": self.global_step,
@@ -619,27 +777,52 @@ class Engine:
                         break
                 if self._stop:
                     self.preempted = True
-                    self.save_checkpoint(blocking=True)
+                    if not self._skip_stop_checkpoint:
+                        self.save_checkpoint(blocking=True)
                     break
-                rec = self._epoch_record(epoch, losses, auxes, t0)
+                rec = self._epoch_record(epoch, losses, auxes, t0, flagged)
                 self.history.append(rec)
                 self._position = (epoch + 1, 0, [], [])
                 losses, auxes = [], []
                 self._fire("on_epoch", rec)
                 if self._stop:          # stop requested by an epoch hook
                     self.preempted = True
-                    self.save_checkpoint(blocking=True)
+                    if not self._skip_stop_checkpoint:
+                        self.save_checkpoint(blocking=True)
                     break
+        except BaseException as e:
+            fit_error = e
+            raise
         finally:
-            self._fire("on_fit_end")
+            try:
+                self._fire("on_fit_end")
+            finally:
+                if self.checkpoint is not None:
+                    # surface a failed FINAL async save (its error is
+                    # otherwise only raised on the next save/wait — i.e.
+                    # never) without masking an in-flight fit exception
+                    try:
+                        self.checkpoint.wait()
+                    except BaseException as we:  # noqa: BLE001
+                        if fit_error is None:
+                            raise
+                        warnings.warn(
+                            f"a background checkpoint save also failed "
+                            f"during error teardown: {we!r}",
+                            stacklevel=2)
         return TrainResult(history=self.history,
                            params=self.backend.params(self.state),
                            seconds=time.perf_counter() - t0)
 
-    def _epoch_record(self, epoch: int, losses, auxes, t0) -> Dict:
+    def _epoch_record(self, epoch: int, losses, auxes, t0,
+                      flagged: int = 0) -> Dict:
         rec = {"epoch": epoch,
                "loss": float(np.mean([float(l) for l in losses])),
-               "time": time.perf_counter() - t0}
+               "time": time.perf_counter() - t0,
+               # straggler diagnostic (StragglerDetector.flag_step):
+               # wall-time-derived, so resumed-run histories may differ
+               # here (tests strip it like "time")
+               "flagged_steps": flagged}
         if self.cfg.multilabel:
             tp = sum(float(a["tp"]) for a in auxes)
             fp = sum(float(a["fp"]) for a in auxes)

@@ -26,9 +26,12 @@ Sections (all plain dataclasses, JSON ↔ dataclass via to_json/from_json):
   execution  data_shards (None → single device; N → shard_map DP mesh),
              dp_axis, compression (None|"bf16"|4|8) + its group size,
              microbatches (per-shard gradient accumulation), prefetch
-             depth
+             depth + producer supervision timeout
   run        epochs, seed, eval_every + an EXPLICIT eval_split,
-             checkpoint dir/interval/keep, verbose
+             checkpoint dir/interval/keep, verbose, plus the robustness
+             knobs (docs/robustness.md): faults (chaos-testing fault
+             plan) and the divergence guards
+             (max_consecutive_skipped / divergence_factor)
 
 The resolved spec JSON is the reproducibility artifact: run drivers
 (repro.launch.run_experiment) write it next to the metrics, and
@@ -263,6 +266,12 @@ class ExecutionSpec:
                        "(incl. DP stacking + device_put); 0 is fully "
                        "synchronous — trajectories are identical "
                        "either way")
+    prefetch_timeout_s: float = _f(600.0, "seconds a training step may "
+                                   "wait on the prefetch producer before "
+                                   "the run aborts with a diagnosable "
+                                   "PrefetchError naming the dead/hung "
+                                   "producer (docs/robustness.md) "
+                                   "instead of blocking forever")
 
 
 @dataclasses.dataclass
@@ -281,6 +290,21 @@ class RunSpec:
                                "checkpoints")
     checkpoint_keep: int = _f(3, "newest checkpoints retained")
     verbose: bool = _f(False, "per-epoch metric printing (LoggingHook)")
+    faults: Optional[Dict[str, Any]] = _f(
+        None, "fault-injection plan (runtime.faults.FaultPlan.to_dict "
+        "format: {'seed': int, 'rules': {site: {at/times/prob/value}}}); "
+        "None — every production run — keeps injection provably "
+        "zero-cost. Chaos testing only; see docs/robustness.md for the "
+        "site table")
+    max_consecutive_skipped: Optional[int] = _f(
+        None, "divergence guard: abort cleanly (last-good checkpoint "
+        "kept, structured stop_reason in metrics) after this many "
+        "consecutive non-finite losses; None disables the guard")
+    divergence_factor: Optional[float] = _f(
+        None, "divergence guard: abort and roll back to the last-good "
+        "checkpoint when a finite loss exceeds this factor × the "
+        "trailing median loss (window 32, warmup 8); None disables "
+        "(must be > 1 when set)")
 
 
 _SECTIONS = {"data": DataSpec, "partition": PartitionSpec,
@@ -439,6 +463,20 @@ def validate(spec: ExperimentSpec) -> ExperimentSpec:
     gs = spec.execution.compression_group_size
     check(gs is None or gs >= 1, "execution.compression_group_size",
           "must be None or >= 1")
+    check(spec.execution.prefetch_timeout_s > 0,
+          "execution.prefetch_timeout_s", "> 0")
+    mcs = spec.run.max_consecutive_skipped
+    check(mcs is None or mcs >= 1, "run.max_consecutive_skipped",
+          "must be None or >= 1")
+    df = spec.run.divergence_factor
+    check(df is None or df > 1.0, "run.divergence_factor",
+          "must be None or > 1")
+    if spec.run.faults is not None:
+        from repro.runtime.faults import FaultPlan
+        try:
+            FaultPlan.from_dict(spec.run.faults)
+        except (ValueError, TypeError) as e:
+            raise ValueError(f"spec.run.faults: {e}") from e
     return spec
 
 
@@ -614,8 +652,19 @@ def build_experiment(spec: ExperimentSpec, *, graph: Optional[CSRGraph]
     training trajectories. `graph`/`mesh` can be injected (tests,
     pre-loaded data); `extra_hooks` append after the standard stack."""
     validate(spec)
+    fault_plan = None
+    if spec.run.faults is not None:
+        from repro.runtime.faults import FaultPlan
+        fault_plan = FaultPlan.from_dict(spec.run.faults)
     if graph is None:
-        graph = build_graph(spec)
+        if fault_plan is not None:
+            # download/materialization fault sites fire during dataset
+            # build too, not just inside Engine.fit
+            from repro.runtime.faults import fault_scope
+            with fault_scope(fault_plan):
+                graph = build_graph(spec)
+        else:
+            graph = build_graph(spec)
     if spec.batch.sampler == "cluster":
         parts, stats = build_partition(spec, graph)
     else:
@@ -642,7 +691,11 @@ def build_experiment(spec: ExperimentSpec, *, graph: Optional[CSRGraph]
     hooks = build_hooks(spec, graph, cfg, checkpoint) + list(extra_hooks)
     engine = Engine(batcher, cfg, backend, epochs=spec.run.epochs,
                     seed=spec.run.seed, prefetch=spec.execution.prefetch,
-                    hooks=hooks, checkpoint=checkpoint)
+                    hooks=hooks, checkpoint=checkpoint,
+                    fault_plan=fault_plan,
+                    max_consecutive_skipped=spec.run.max_consecutive_skipped,
+                    divergence_factor=spec.run.divergence_factor,
+                    prefetch_timeout=spec.execution.prefetch_timeout_s)
     return Experiment(spec=spec, graph=graph, parts=parts,
                       partition_stats=stats, batcher=batcher, cfg=cfg,
                       opt=opt, mesh=mesh, engine=engine)

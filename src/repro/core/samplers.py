@@ -157,13 +157,19 @@ class _SaintSampler:
                                 precompute_ax=self.precompute_ax,
                                 tile_pool=self._tile_pool)
 
-    def epoch(self, epoch_idx: int):
+    def epoch(self, epoch_idx: int, start_step: int = 0):
         """steps_per_epoch() i.i.d. subgraph batches. The stream is a
         pure function of (seed, epoch_idx) — resume fast-forward skips
-        k payloads and reproduces the tail exactly."""
+        k payloads and reproduces the tail exactly. start_step=k still
+        DRAWS the skipped steps (the rng stream must advance exactly as
+        training's did) but skips payload construction — the subgraph
+        extraction + tiling that dominates batch cost."""
         rng = np.random.default_rng((self.seed, epoch_idx))
-        for _ in range(self.steps_per_epoch()):
-            yield self._payload(*self.draw(rng))
+        for step in range(self.steps_per_epoch()):
+            draw = self.draw(rng)
+            if step < start_step:
+                continue
+            yield self._payload(*draw)
 
     def sample_csrs(self, n: int) -> List[Tuple[Array, Array, Array]]:
         """Normalized batch CSRs of the first n batches of epoch 0 (the

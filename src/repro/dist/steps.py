@@ -39,6 +39,7 @@ from repro.models.config import ArchConfig
 from repro.models.lm import (decode_step, encode, lm_loss, prefill,
                              spec_params)
 from repro.models.spec import TensorSpec, map_specs
+from repro.runtime import faults
 from repro.nn.optim import (AdamState, Optimizer, apply_updates,
                             global_norm)
 
@@ -353,4 +354,7 @@ def make_gcn_train_step(cfg: GCNConfig, opt: Optimizer, mesh, *,
                    in_specs=(state_spec, P(), P(axis_name)),
                    out_specs=(state_spec, P(), P()),
                    check_rep=False)
-    return jax.jit(fn, donate_argnums=(0,))
+    # step.nonfinite_loss injection seam (runtime.faults): transparent
+    # passthrough unless a FaultPlan is installed — the stacked batch is
+    # the last argument, same as the single-device step
+    return faults.wrap_step_faults(jax.jit(fn, donate_argnums=(0,)))

@@ -51,6 +51,7 @@ import os
 import pathlib
 import shutil
 import tempfile
+import time
 import urllib.request
 import zipfile
 from typing import Callable, Dict, Optional, Tuple
@@ -58,6 +59,19 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.graph.csr import CSRGraph
+from repro.runtime import faults
+
+# download retry policy (flaky mirrors are the COMMON case at
+# multi-GB archive sizes): capped exponential backoff with
+# deterministic jitter, a per-attempt socket timeout, and partial-file
+# cleanup between attempts. Checksum mismatches are NOT retried — a
+# wrong file re-downloads wrong. Env overrides (tests drop the backoff
+# to milliseconds): $REPRO_DOWNLOAD_ATTEMPTS, $REPRO_DOWNLOAD_BACKOFF
+# (first-retry delay, seconds), $REPRO_DOWNLOAD_TIMEOUT (per attempt).
+DOWNLOAD_ATTEMPTS = 4
+DOWNLOAD_BACKOFF_S = 1.0
+DOWNLOAD_BACKOFF_CAP_S = 30.0
+DOWNLOAD_TIMEOUT_S = 120.0
 
 # bump when the processed on-disk layout or parsing semantics change —
 # old processed/ dirs are ignored (and rebuilt from raw/) on mismatch
@@ -148,36 +162,84 @@ def verify_checksum(raw_dir: pathlib.Path, remote: RemoteFile,
             f"CHECKSUMS.json entry) to re-accept it")
 
 
+def _env_float(name: str, default: float) -> float:
+    raw = os.environ.get(name)
+    return default if not raw else float(raw)
+
+
+def _backoff_delay(filename: str, attempt: int, base: float) -> float:
+    """Capped exponential backoff before retry `attempt` (1-based), with
+    DETERMINISTIC jitter in [0.5, 1.0)× hashed from (filename, attempt)
+    — desynchronizes a fleet hammering one mirror without making test
+    runs flaky."""
+    h = hashlib.blake2b(f"{filename}:{attempt}".encode(),
+                        digest_size=8).digest()
+    jitter = 0.5 + 0.5 * int.from_bytes(h, "big") / 2.0 ** 64
+    return min(DOWNLOAD_BACKOFF_CAP_S, base * 2.0 ** (attempt - 1)) * jitter
+
+
+def _download_once(url: str, out, timeout: float) -> None:
+    """One streaming download attempt into the open file `out`. The
+    fault sites simulate the two transient mirror failures: refusing
+    the connection (download.error) and cutting the stream mid-body
+    (download.partial — some bytes land, then the read dies)."""
+    if faults.maybe_fail("download.error"):
+        raise faults.InjectedFault("download.error")
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        if faults.maybe_fail("download.partial"):
+            out.write(resp.read(1024))
+            raise faults.InjectedFault("download.partial")
+        shutil.copyfileobj(resp, out)
+
+
 def fetch(remote: RemoteFile, raw_dir: pathlib.Path) -> pathlib.Path:
     """Download-once: return raw_dir/<filename>, downloading + checksum-
-    verifying it first if absent. Partial downloads never land at the
-    final path (tmp file + atomic rename)."""
+    verifying it first if absent. Transient failures (connection errors,
+    truncated streams, per-attempt timeouts) retry up to
+    $REPRO_DOWNLOAD_ATTEMPTS times with capped exponential backoff;
+    every attempt writes to a fresh tmp file that is cleaned up on
+    failure, and stale <filename>.part-* leftovers from crashed earlier
+    runs are swept first. Partial downloads never land at the final
+    path (tmp file + atomic rename), and a checksum mismatch on a
+    COMPLETE download raises immediately — re-downloading a wrong file
+    yields the same wrong file."""
     raw_dir.mkdir(parents=True, exist_ok=True)
     dest = raw_dir / remote.filename
     if dest.exists():
         return dest
+    for stale in raw_dir.glob(remote.filename + ".part-*"):
+        stale.unlink(missing_ok=True)
     url = _resolve_url(remote)
-    tmp_fd, tmp_name = tempfile.mkstemp(dir=raw_dir,
-                                        prefix=remote.filename + ".part-")
-    tmp = pathlib.Path(tmp_name)
-    try:
-        with os.fdopen(tmp_fd, "wb") as out:
+    attempts = max(1, int(_env_float("REPRO_DOWNLOAD_ATTEMPTS",
+                                     DOWNLOAD_ATTEMPTS)))
+    base = _env_float("REPRO_DOWNLOAD_BACKOFF", DOWNLOAD_BACKOFF_S)
+    timeout = _env_float("REPRO_DOWNLOAD_TIMEOUT", DOWNLOAD_TIMEOUT_S)
+    last_err: Optional[BaseException] = None
+    for attempt in range(attempts):
+        if attempt:
+            time.sleep(_backoff_delay(remote.filename, attempt, base))
+        tmp_fd, tmp_name = tempfile.mkstemp(
+            dir=raw_dir, prefix=remote.filename + ".part-")
+        tmp = pathlib.Path(tmp_name)
+        try:
             try:
-                with urllib.request.urlopen(url) as resp:
-                    shutil.copyfileobj(resp, out)
-            except (OSError, ValueError) as e:
-                raise RuntimeError(
-                    f"could not download {remote.filename} from {url}: "
-                    f"{e}. If this machine is offline, fetch the file "
-                    f"elsewhere and drop it at {dest}, or set "
-                    f"$REPRO_DATASETS_MIRROR to a reachable mirror "
-                    f"(file:// URLs work).") from e
-        digest = _sha256_file(tmp)
-        verify_checksum(raw_dir, remote, digest)
-        os.replace(tmp, dest)
-    finally:
-        tmp.unlink(missing_ok=True)
-    return dest
+                with os.fdopen(tmp_fd, "wb") as out:
+                    _download_once(url, out, timeout)
+            except (OSError, ValueError, faults.InjectedFault) as e:
+                last_err = e            # transient: retry (tmp cleaned
+                continue                # up by the finally below)
+            digest = _sha256_file(tmp)
+            verify_checksum(raw_dir, remote, digest)   # fatal: no retry
+            os.replace(tmp, dest)
+            return dest
+        finally:
+            tmp.unlink(missing_ok=True)
+    raise RuntimeError(
+        f"could not download {remote.filename} from {url} after "
+        f"{attempts} attempt(s): {last_err}. If this machine is "
+        f"offline, fetch the file elsewhere and drop it at {dest}, or "
+        f"set $REPRO_DATASETS_MIRROR to a reachable mirror "
+        f"(file:// URLs work).") from last_err
 
 
 def _extract_archives(raw_dir: pathlib.Path) -> None:

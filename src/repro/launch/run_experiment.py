@@ -134,6 +134,11 @@ def main(argv=None) -> int:
                "final": {"split": split, "score": final_score},
                "seconds": result.seconds,
                "preempted": exp.engine.preempted,
+               # structured abort cause: "preempted", "divergence: ...",
+               # "stop_at_step k" — null for a run that finished its
+               # epochs (docs/robustness.md)
+               "stop_reason": exp.engine.stop_reason,
+               "diverged": exp.engine.diverged,
                "global_step": exp.engine.global_step}
     (out / "metrics.json").write_text(json.dumps(metrics, indent=1))
     print(json.dumps({"name": spec.name, "epochs": len(result.history),

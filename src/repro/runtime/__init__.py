@@ -1,3 +1,5 @@
 from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.faults import (FaultPlan, FaultRule, InjectedFault,
+                                  fault_scope, install, maybe_fail)
 from repro.runtime.resilience import (PreemptionHandler, StragglerDetector,
                                       HeartbeatMonitor, ElasticPlan)

@@ -10,6 +10,15 @@ Design (orbax is not installed — built from scratch):
     the arrays are snapshotted to host first — device buffers are not
     held).
   * keep-k GC with never-delete-latest.
+  * self-healing restore: `latest_valid_step()` verifies each candidate
+    (manifest + per-array crc) newest-first, QUARANTINES a corrupt step
+    dir to step_N.corrupt-<nonce> with a warning, and falls back to the
+    previous good step — Engine.fit(resume=True) then re-fast-forwards
+    the batch stream to wherever the fallback landed. Stale
+    step_*.tmp-* dirs left by crashes mid-write are swept on manager
+    init. Both paths are exercised by injected faults
+    (runtime.faults: checkpoint.crash_before_rename /
+    checkpoint.corrupt_latest; tests/test_faults.py).
   * ELASTIC restore: arrays are stored UNSHARDED (gathered) with their
     logical shapes; restore() re-shards onto whatever mesh/sharding the
     new job uses — a 512-chip checkpoint restores onto 256 chips (or 8)
@@ -27,13 +36,34 @@ import shutil
 import tempfile
 import threading
 import time
+import uuid
+import warnings
 import zlib
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
+from repro.runtime import faults
+
 PyTree = Any
+
+
+def _flip_one_bit(path: pathlib.Path) -> None:
+    """Corrupt a file in place (the checkpoint.corrupt_latest fault:
+    what a bad disk/partial write does to a shard, without recomputing
+    anything). Flips one bit at several spread-out offsets — a single
+    flip can land in npy-header padding or zip framing that nothing
+    validates (zipfile only checks member CRCs at EOF), which would make
+    the injected corruption silently benign on small shards."""
+    size = path.stat().st_size
+    with open(path, "r+b") as f:
+        for num, den in ((1, 3), (1, 2), (2, 3)):
+            off = size * num // den
+            f.seek(off)
+            b = f.read(1)
+            f.seek(off)
+            f.write(bytes([b[0] ^ 0x01]))
 
 
 def _flatten_with_paths(tree) -> List:
@@ -57,6 +87,11 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # a crash mid-_write leaves step_*.tmp-* behind; they are never
+        # read (steps() skips them) but accumulate forever — sweep them
+        # here, where no writer of THIS process can be in flight yet
+        for stale in self.dir.glob("step_*.tmp-*"):
+            shutil.rmtree(stale, ignore_errors=True)
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree: PyTree, *, blocking: bool = False,
@@ -106,11 +141,18 @@ class CheckpointManager:
                 arrays[key.replace("/", "__")] = arr
             np.savez(tmp / "shard_0.npz", **arrays)
             (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if faults.maybe_fail("checkpoint.crash_before_rename"):
+                # simulate dying right before the atomic publish: the
+                # tmp dir must leak, exactly as a real crash leaves it
+                tmp = None
+                raise faults.InjectedFault("checkpoint.crash_before_rename")
             if final.exists():
                 shutil.rmtree(final)
             os.rename(tmp, final)                     # atomic publish
+            if faults.maybe_fail("checkpoint.corrupt_latest"):
+                _flip_one_bit(final / "shard_0.npz")
         finally:
-            if tmp.exists():
+            if tmp is not None and tmp.exists():
                 shutil.rmtree(tmp, ignore_errors=True)
         self._gc()
 
@@ -120,6 +162,7 @@ class CheckpointManager:
         for p in self.dir.iterdir():
             if p.is_dir() and p.name.startswith("step_") \
                     and ".tmp-" not in p.name \
+                    and ".corrupt-" not in p.name \
                     and (p / "manifest.json").exists():
                 out.append(int(p.name.split("_")[1]))
         return sorted(out)
@@ -127,6 +170,56 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
+
+    # -- integrity + fallback -------------------------------------------
+    def verify_step(self, step: int) -> None:
+        """Raise unless step's shard fully matches its manifest (every
+        manifest array present, crc32/shape/dtype intact). Any failure
+        mode a torn write or bad disk can produce — unreadable npz,
+        missing array, flipped bits — surfaces here."""
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "shard_0.npz")
+        for key, info in manifest["arrays"].items():
+            name = key.replace("/", "__")
+            if name not in data.files:
+                raise IOError(f"step {step}: array {key!r} missing "
+                              f"from shard")
+            arr = data[name]
+            if list(arr.shape) != list(info["shape"]) \
+                    or str(arr.dtype) != info["dtype"]:
+                raise IOError(f"step {step}: array {key!r} is "
+                              f"{arr.dtype}{arr.shape}, manifest says "
+                              f"{info['dtype']}{tuple(info['shape'])}")
+            if zlib.crc32(np.ascontiguousarray(arr).tobytes()) \
+                    != info["crc32"]:
+                raise IOError(f"step {step}: checksum mismatch for "
+                              f"{key!r}")
+
+    def quarantine(self, step: int, reason: str = "") -> pathlib.Path:
+        """Move a corrupt step dir aside to step_N.corrupt-<nonce> (kept
+        for post-mortem, invisible to steps()/restore) and warn."""
+        src = self.dir / f"step_{step:010d}"
+        dest = self.dir / f"{src.name}.corrupt-{uuid.uuid4().hex[:8]}"
+        os.rename(src, dest)
+        warnings.warn(
+            f"checkpoint step {step} in {self.dir} is corrupt"
+            + (f" ({reason})" if reason else "")
+            + f" — quarantined to {dest.name}, falling back to the "
+            f"previous step", stacklevel=3)
+        return dest
+
+    def latest_valid_step(self) -> Optional[int]:
+        """The newest step that passes verify_step(), quarantining every
+        corrupt candidate it walks past. None when nothing valid is
+        left."""
+        for step in reversed(self.steps()):
+            try:
+                self.verify_step(step)
+                return step
+            except Exception as e:   # any torn-write failure mode
+                self.quarantine(step, reason=str(e))
+        return None
 
     def read_metadata(self, step: Optional[int] = None) -> Dict:
         """The `metadata` dict passed to save() (the Engine keeps its
@@ -149,10 +242,13 @@ class CheckpointManager:
                 shardings: Optional[PyTree] = None) -> PyTree:
         """Restore into the structure of `target_tree` (values ignored).
         `shardings` (optional pytree of NamedSharding, same structure)
-        re-shards every array onto the CURRENT mesh — elastic restart."""
-        step = step if step is not None else self.latest_step()
+        re-shards every array onto the CURRENT mesh — elastic restart.
+        With step=None the newest VALID step is used (corrupt newer
+        steps are quarantined with a warning — self-healing fallback);
+        an explicit step is restored as-is and raises on corruption."""
+        step = step if step is not None else self.latest_valid_step()
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            raise FileNotFoundError(f"no valid checkpoints in {self.dir}")
         d = self.dir / f"step_{step:010d}"
         manifest = json.loads((d / "manifest.json").read_text())
         data = np.load(d / "shard_0.npz")

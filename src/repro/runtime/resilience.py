@@ -23,7 +23,12 @@ from typing import Callable, Deque, Dict, List, Optional
 class PreemptionHandler:
     """`with PreemptionHandler() as p:` — loop checks p.should_stop each
     step; on SIGTERM the current step finishes, a final checkpoint is
-    written, and the job exits 0 so the scheduler restarts it cleanly."""
+    written, and the job exits 0 so the scheduler restarts it cleanly.
+
+    This is THE signal→flag implementation: `core.engine.PreemptionHook`
+    is a thin adapter that wires one of these into the Engine's hook
+    seam (installed for the duration of fit() only) — there is no
+    second signal handler anywhere in the repo."""
 
     def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
         self._signals = signals
@@ -59,14 +64,36 @@ class StragglerDetector:
     EWMA exceeds `threshold` × the fleet median.
 
     Mitigation hooks: report() feeds the scheduler (to drain the host) or
-    triggers elastic re-mesh without it (see ElasticState)."""
+    triggers elastic re-mesh without it (see ElasticState).
+
+    Single-host runs use `flag_step` instead: with one host, `record`
+    compares the host's EWMA against the median of itself and can never
+    flag, so per-STEP wall times are compared against their own
+    trailing median — the Engine feeds every step's duration in and
+    counts flagged steps per epoch into the history rows
+    (`flagged_steps`), which is how a degrading disk or a noisy
+    neighbor shows up in metrics.json before it kills throughput."""
     alpha: float = 0.2
     threshold: float = 1.5
     window: int = 64
+    warmup: int = 8
 
     def __post_init__(self):
         self._ewma: Dict[int, float] = {}
         self._hist: Deque = collections.deque(maxlen=self.window)
+        self._step_hist: Deque = collections.deque(maxlen=self.window)
+
+    def flag_step(self, seconds: float) -> bool:
+        """Single-host per-step variant of record(): True when this
+        step took more than `threshold` × the trailing median of the
+        last `window` steps (after `warmup` steps have been seen —
+        jit compilation makes the first steps pathological)."""
+        hist = self._step_hist
+        flagged = bool(
+            len(hist) >= self.warmup
+            and seconds > self.threshold * sorted(hist)[len(hist) // 2])
+        hist.append(seconds)
+        return flagged
 
     def record(self, host_times: Dict[int, float]) -> List[int]:
         """host -> step seconds. Returns hosts currently flagged."""
@@ -118,6 +145,14 @@ class HeartbeatMonitor:
 @dataclasses.dataclass
 class ElasticPlan:
     """Decision record for a restart with a different healthy-host set.
+
+    STATUS: this is the multi-host seam (ROADMAP §2 — "train a
+    100M-node graph no single host can hold"); nothing in-process
+    consumes it yet, deliberately. It stays exported (and covered by
+    tests/test_runtime.py) because the checkpoint format contract
+    below — unsharded arrays, restore-onto-any-mesh — is what the
+    multi-host PR will build on; deleting it would orphan that
+    contract.
 
     The checkpoint format stores arrays unsharded with logical shapes
     (runtime/checkpoint.py), so restoring onto the new mesh is just

@@ -238,6 +238,100 @@ def test_missing_file_error_is_actionable(tmp_path, monkeypatch):
 
 
 # ----------------------------------------------------------------------
+# download hardening: retry/backoff, partial cleanup, fatal checksums
+# (fault sites from runtime.faults — docs/robustness.md)
+# ----------------------------------------------------------------------
+@pytest.fixture
+def flaky_env(tmp_path, monkeypatch):
+    """A file:// source + RemoteFile pair and a millisecond backoff."""
+    import hashlib
+
+    from repro.graph.datasets import RemoteFile
+    monkeypatch.setenv("REPRO_DOWNLOAD_BACKOFF", "0.01")
+    src = tmp_path / "mirror" / "file.bin"
+    src.parent.mkdir()
+    src.write_bytes(b"x" * 4096)
+    sha = hashlib.sha256(src.read_bytes()).hexdigest()
+    raw = tmp_path / "raw"
+    return RemoteFile("file.bin", src.as_uri(), sha256=sha), raw
+
+
+def test_download_converges_under_transient_errors(flaky_env):
+    from repro.graph.datasets import fetch
+    from repro.runtime.faults import FaultPlan, FaultRule, fault_scope
+    rf, raw = flaky_env
+    plan = FaultPlan(rules={"download.error": FaultRule(times=2)})
+    with fault_scope(plan):
+        dest = fetch(rf, raw)
+    assert dest.read_bytes() == b"x" * 4096
+
+
+def test_partial_download_retried_and_cleaned(flaky_env):
+    from repro.graph.datasets import fetch
+    from repro.runtime.faults import FaultPlan, FaultRule, fault_scope
+    rf, raw = flaky_env
+    plan = FaultPlan(rules={"download.partial": FaultRule(times=1)})
+    with fault_scope(plan):
+        dest = fetch(rf, raw)
+    assert dest.read_bytes() == b"x" * 4096
+    assert not list(raw.glob("*.part-*"))   # no truncated leftovers
+
+
+def test_exhausted_attempts_keep_actionable_hint(flaky_env):
+    from repro.graph.datasets import fetch
+    from repro.runtime.faults import (FaultPlan, FaultRule, InjectedFault,
+                                      fault_scope)
+    rf, raw = flaky_env
+    plan = FaultPlan(rules={"download.error": FaultRule()})
+    with fault_scope(plan):
+        with pytest.raises(RuntimeError, match="REPRO_DATASETS_MIRROR") \
+                as ei:
+            fetch(rf, raw)
+    assert "attempt" in str(ei.value)
+    assert isinstance(ei.value.__cause__, InjectedFault)
+    assert not list(raw.glob("*.part-*"))
+
+
+def test_checksum_mismatch_is_fatal_not_retried(flaky_env, monkeypatch):
+    """Re-downloading a wrong file yields the same wrong file — exactly
+    one download must happen before the ValueError."""
+    import dataclasses
+
+    from repro.graph import datasets as ds
+    rf, raw = flaky_env
+    bad = dataclasses.replace(rf, sha256="0" * 64)
+    calls = []
+    real = ds._download_once
+    monkeypatch.setattr(
+        ds, "_download_once",
+        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        ds.fetch(bad, raw)
+    assert len(calls) == 1
+
+
+def test_stale_part_files_swept_before_download(flaky_env):
+    from repro.graph.datasets import fetch
+    rf, raw = flaky_env
+    raw.mkdir(parents=True)
+    stale = raw / "file.bin.part-leftover"
+    stale.write_bytes(b"junk from a crashed run")
+    fetch(rf, raw)
+    assert not stale.exists()
+
+
+def test_backoff_is_capped_and_deterministic():
+    from repro.graph.datasets import (DOWNLOAD_BACKOFF_CAP_S,
+                                      _backoff_delay)
+    delays = [_backoff_delay("f.zip", a, base=1.0) for a in range(1, 12)]
+    assert delays == [_backoff_delay("f.zip", a, base=1.0)
+                      for a in range(1, 12)]
+    assert all(d <= DOWNLOAD_BACKOFF_CAP_S for d in delays)
+    assert delays[0] < 1.0            # jitter in [0.5, 1.0)x
+    assert delays[0] >= 0.5
+
+
+# ----------------------------------------------------------------------
 # end to end: the ppi_real preset machinery trains on the fixture
 # ----------------------------------------------------------------------
 def test_ppi_real_preset_trains_end_to_end(dataset_env):

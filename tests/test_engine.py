@@ -34,7 +34,8 @@ def _cora_spec(**overrides) -> ExperimentSpec:
 
 
 def _strip_time(history):
-    return [{k: v for k, v in h.items() if k != "time"} for h in history]
+    return [{k: v for k, v in h.items()
+             if k not in ("time", "flagged_steps")} for h in history]
 
 
 def _assert_params_equal(a, b):
@@ -79,7 +80,8 @@ def cora_spec(overrides=None):
     return apply_overrides(spec, overrides or {})
 
 def strip_time(history):
-    return [{k: v for k, v in h.items() if k != "time"} for h in history]
+    return [{k: v for k, v in h.items()
+             if k not in ("time", "flagged_steps")} for h in history]
 
 def params_equal(a, b):
     eq = jax.tree_util.tree_map(
@@ -172,3 +174,52 @@ assert params_equal(r.params, straight.params)
 print("DP_RESUME_OK")
 """, devices=2)
     assert "DP_RESUME_OK" in out
+
+
+# ----------------------------------------------------------------------
+# the start_step fast-forward seam (Sampler.epoch(e, start_step=k))
+# ----------------------------------------------------------------------
+def _batch_leaves(batch):
+    return [np.asarray(l)
+            for l in jax.tree_util.tree_leaves(batch.astuple())]
+
+
+@pytest.mark.parametrize("sampler", ["cluster", "saint_node",
+                                     "saint_edge"])
+def test_start_step_seam_matches_discard(sampler):
+    """epoch(e, start_step=k) must be bitwise-equivalent to building
+    the whole epoch and discarding the first k batches — the contract
+    Engine resume and prefetch-producer rebuild both depend on. The
+    seam may only skip batch CONSTRUCTION, never RNG draws."""
+    exp = build_experiment(_cora_spec(**{"batch.sampler": sampler}))
+    b = exp.batcher
+    n = b.steps_per_epoch()
+    for epoch in (0, 1):
+        for k in (0, 1, n - 1, n):
+            full = list(b.epoch(epoch))[k:]
+            seam = list(b.epoch(epoch, start_step=k))
+            assert len(seam) == len(full), (sampler, epoch, k)
+            for f, s in zip(full, seam):
+                fl, sl = _batch_leaves(f), _batch_leaves(s)
+                assert len(fl) == len(sl)
+                assert all(np.array_equal(x, y)
+                           for x, y in zip(fl, sl)), (sampler, epoch, k)
+
+
+def test_mid_epoch_resume_uses_seam_trajectory(tmp_path):
+    """Kill mid-epoch, resume: the seam path (skip construction) must
+    land on the identical trajectory as the straight run — this is the
+    same lock as test_resume_matches_straight_run but asserting the
+    cheap path is actually taken on a single-device run."""
+    over = {"run.epochs": 3}
+    straight = build_experiment(_cora_spec(**over)).fit()
+    ck = {"run.checkpoint_dir": str(tmp_path / "seam_ck"), **over}
+    killed = build_experiment(_cora_spec(**ck),
+                              extra_hooks=[StopAtStepHook(3)])
+    killed.fit()
+    assert killed.engine.preempted
+    resumed = build_experiment(_cora_spec(**ck))
+    assert resumed.engine._start_seam     # the cheap path is available
+    r = resumed.fit(resume=True)
+    assert _strip_time(r.history) == _strip_time(straight.history)
+    _assert_params_equal(r.params, straight.params)

@@ -1,0 +1,376 @@
+"""Fault-injection harness + self-healing runtime (runtime.faults,
+docs/robustness.md).
+
+Three layers:
+
+1. FaultPlan semantics — deterministic firing, JSON round trip, spec
+   wiring, and the zero-cost guarantee (an inert plan and no plan
+   produce bitwise-identical trajectories).
+2. Per-fault-kind recovery, fast — one representative injection per
+   site proving the survival path end to end through Engine.fit.
+3. The chaos matrix (@pytest.mark.chaos, also `slow` so the fast tier
+   skips it) — kill at EVERY global step × fault kind on ppi_tiny,
+   resume, and require the final params bitwise-equal to a never-faulted
+   run's.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.experiment import (ExperimentSpec, build_experiment,
+                                   preset, validate)
+from repro.core.prefetch import PrefetchError
+from repro.runtime.faults import (FAULT_SITES, FaultPlan, FaultRule,
+                                  InjectedFault, active, fault_scope,
+                                  maybe_fail)
+
+
+def _params_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def _losses(result):
+    return [h["loss"] for h in result.history]
+
+
+# ----------------------------------------------------------------------
+# 1. plan semantics
+# ----------------------------------------------------------------------
+def test_unknown_site_rejected():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(rules={"download.exploded": FaultRule()})
+
+
+def test_rule_unknown_field_rejected():
+    with pytest.raises(ValueError, match="unknown FaultRule field"):
+        FaultRule.from_dict({"at": [1], "when": "now"})
+    with pytest.raises(ValueError, match="unknown FaultPlan field"):
+        FaultPlan.from_dict({"rules": {}, "sites": []})
+
+
+def test_json_round_trip():
+    plan = FaultPlan(seed=7, rules={
+        "download.error": FaultRule(times=2),
+        "sigterm.at_step": FaultRule(at=(3, 5)),
+        "step.nonfinite_loss": FaultRule(prob=0.25, value=1e30)})
+    back = FaultPlan.from_dict(plan.to_dict())
+    assert back.to_dict() == plan.to_dict()
+    assert back.rules["sigterm.at_step"].at == (3, 5)
+
+
+def test_occurrence_semantics():
+    plan = FaultPlan(rules={"download.error": FaultRule(at=(1, 3)),
+                            "download.partial": FaultRule(times=2)})
+    with fault_scope(plan):
+        err = [bool(maybe_fail("download.error")) for _ in range(5)]
+        part = [bool(maybe_fail("download.partial")) for _ in range(5)]
+        # a site with NO rule never advances a counter and never fires
+        other = [bool(maybe_fail("prefetch.producer_crash"))
+                 for _ in range(5)]
+    assert err == [False, True, False, True, False]
+    assert part == [True, True, False, False, False]
+    assert other == [False] * 5
+
+
+def test_explicit_index_bypasses_counter():
+    plan = FaultPlan(rules={"sigterm.at_step": FaultRule(at=(7,))})
+    with fault_scope(plan):
+        assert not maybe_fail("sigterm.at_step", index=6)
+        assert maybe_fail("sigterm.at_step", index=7)
+        assert maybe_fail("sigterm.at_step", index=7)   # replays: no count
+
+
+def test_prob_thinning_is_deterministic():
+    plan = FaultPlan(seed=3, rules={
+        "download.error": FaultRule(prob=0.5)})
+    with fault_scope(plan):
+        fires1 = [bool(maybe_fail("download.error")) for _ in range(64)]
+    with fault_scope(FaultPlan.from_dict(plan.to_dict())):
+        fires2 = [bool(maybe_fail("download.error")) for _ in range(64)]
+    assert fires1 == fires2          # same plan → same decisions
+    assert 8 < sum(fires1) < 56      # actually thinned, not all/none
+
+
+def test_fault_scope_restores_previous_plan():
+    assert active() is None
+    outer = FaultPlan(rules={})
+    with fault_scope(outer):
+        inner = FaultPlan(rules={})
+        with fault_scope(inner):
+            assert active() is inner
+        assert active() is outer
+    assert active() is None
+    assert maybe_fail("download.error") is None   # no plan → no-op
+
+
+def test_spec_validates_fault_plan():
+    spec = preset("ppi_tiny")
+    spec.run.faults = {"rules": {"no.such.site": {}}}
+    with pytest.raises(ValueError, match="spec.run.faults"):
+        validate(spec)
+    spec.run.faults = {"rules": {"download.error": {"bogus": 1}}}
+    with pytest.raises(ValueError, match="spec.run.faults"):
+        validate(spec)
+    spec.run.faults = {"seed": 1, "rules": {"download.error": {"times": 1}}}
+    validate(spec)
+    # and the new guard fields validate too
+    spec.run.faults = None
+    spec.run.max_consecutive_skipped = 0
+    with pytest.raises(ValueError, match="max_consecutive_skipped"):
+        validate(spec)
+    spec.run.max_consecutive_skipped = None
+    spec.run.divergence_factor = 1.0
+    with pytest.raises(ValueError, match="divergence_factor"):
+        validate(spec)
+    spec.run.divergence_factor = None
+    spec.execution.prefetch_timeout_s = 0.0
+    with pytest.raises(ValueError, match="prefetch_timeout_s"):
+        validate(spec)
+
+
+def test_spec_json_round_trips_new_fields():
+    spec = preset("ppi_tiny")
+    spec.run.faults = {"seed": 2,
+                       "rules": {"sigterm.at_step": {"at": [4]}}}
+    spec.run.max_consecutive_skipped = 3
+    spec.run.divergence_factor = 10.0
+    spec.execution.prefetch_timeout_s = 30.0
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back.to_dict() == spec.to_dict()
+
+
+# ----------------------------------------------------------------------
+# 2. per-kind recovery, fast (shared tiny reference run)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_ref():
+    """Reference never-faulted ppi_tiny run + its spec (2 epochs)."""
+    spec = preset("ppi_tiny")
+    spec.run.epochs = 2
+    result = build_experiment(spec.copy()).fit()
+    return spec, result
+
+
+def _run_faulted_then_resume(spec, ck_dir, faults, *, prefetch=0):
+    """Phase 1: run with `faults` until it stops (or finishes); phase 2:
+    resume WITHOUT faults. Returns (phase1_exp, phase2_result)."""
+    s1 = spec.copy()
+    s1.run.checkpoint_dir = str(ck_dir)
+    s1.execution.prefetch = prefetch
+    s1.run.faults = faults
+    exp1 = build_experiment(s1)
+    try:
+        exp1.fit()
+    except InjectedFault:
+        pass            # a hard crash fault escaped fit — like a kill
+    s2 = s1.copy()
+    s2.run.faults = None
+    exp2 = build_experiment(s2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        r2 = exp2.fit(resume=True)
+    return exp1, r2
+
+
+def test_zero_cost_inert_plan_is_bitwise_identical(tiny_ref):
+    """The lock behind 'FaultPlan=None is provably zero-cost': an
+    installed-but-empty plan takes every injection branch check and
+    still reproduces the no-plan trajectory bit for bit."""
+    spec, ref = tiny_ref
+    s = spec.copy()
+    s.run.faults = {"rules": {}}
+    r = build_experiment(s).fit()
+    assert _losses(r) == _losses(ref)
+    assert _params_equal(r.params, ref.params)
+
+
+def test_sigterm_fault_then_resume_bitwise(tiny_ref, tmp_path):
+    spec, ref = tiny_ref
+    exp1, r2 = _run_faulted_then_resume(
+        spec, tmp_path / "ck",
+        {"rules": {"sigterm.at_step": {"at": [3]}}})
+    assert exp1.engine.preempted and exp1.engine.stop_reason == "preempted"
+    assert _losses(r2) == _losses(ref)
+    assert _params_equal(r2.params, ref.params)
+
+
+def test_corrupt_latest_falls_back_and_recovers(tiny_ref, tmp_path):
+    """The newest checkpoint is bit-flipped on disk; resume quarantines
+    it, restores the previous good step, re-fast-forwards, and the final
+    trajectory still matches the never-faulted run."""
+    spec, ref = tiny_ref
+    exp1, r2 = _run_faulted_then_resume(
+        spec, tmp_path / "ck",
+        {"rules": {"sigterm.at_step": {"at": [6]},
+                   # corrupt the pre-kill blocking save (occurrence 1:
+                   # the epoch-cadence save at epoch 0 is occurrence 0)
+                   "checkpoint.corrupt_latest": {"at": [1]}}})
+    ck = tmp_path / "ck"
+    assert any(".corrupt-" in p.name for p in ck.iterdir())
+    assert _losses(r2) == _losses(ref)
+    assert _params_equal(r2.params, ref.params)
+
+
+def test_crash_before_rename_then_resume(tiny_ref, tmp_path):
+    """Dying mid-checkpoint-write leaks a tmp dir and loses that save;
+    the next run sweeps the tmp dir and resumes from the previous good
+    step onto the reference trajectory."""
+    spec, ref = tiny_ref
+    exp1, r2 = _run_faulted_then_resume(
+        spec, tmp_path / "ck",
+        {"rules": {"checkpoint.crash_before_rename": {"at": [1]}}})
+    ck = tmp_path / "ck"
+    assert not any(".tmp-" in p.name for p in ck.iterdir())  # swept
+    assert _losses(r2) == _losses(ref)
+    assert _params_equal(r2.params, ref.params)
+
+
+def test_prefetch_crash_rebuild_inside_fit(tiny_ref):
+    """A silently-dying prefetch producer is rebuilt once from the
+    sampler's start_step seam — the run completes with the exact
+    no-fault trajectory, no resume needed."""
+    spec, ref = tiny_ref
+    s = spec.copy()
+    s.execution.prefetch = 2
+    s.run.faults = {"rules": {"prefetch.producer_crash": {"at": [2]}}}
+    exp = build_experiment(s)
+    r = exp.fit()
+    assert _losses(r) == _losses(ref)
+    assert _params_equal(r.params, ref.params)
+
+
+def test_prefetch_hang_raises_diagnosable_error(tiny_ref):
+    spec, _ = tiny_ref
+    s = spec.copy()
+    s.execution.prefetch = 2
+    s.execution.prefetch_timeout_s = 0.5
+    s.run.faults = {"rules": {"prefetch.producer_hang": {"at": [1]}}}
+    with pytest.raises(PrefetchError, match="producer_hang"):
+        build_experiment(s).fit()
+
+
+def test_nonfinite_guard_aborts_with_structured_reason(tiny_ref):
+    spec, _ = tiny_ref
+    s = spec.copy()
+    s.run.faults = {"rules": {"step.nonfinite_loss": {}}}   # every step
+    s.run.max_consecutive_skipped = 2
+    exp = build_experiment(s)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        exp.fit()
+    assert exp.engine.diverged
+    assert exp.engine.stop_reason.startswith("divergence:")
+    assert "non-finite" in exp.engine.stop_reason
+
+
+def test_nonfinite_guard_restores_last_good(tiny_ref, tmp_path):
+    """With a checkpoint available, the divergence abort rolls back to
+    finite last-good params instead of returning poisoned ones."""
+    spec, _ = tiny_ref
+    s = spec.copy()
+    s.run.checkpoint_dir = str(tmp_path / "ck")
+    # epoch 0 trains clean (cadence save lands), epoch 1 goes nan
+    s.run.faults = {"rules": {"step.nonfinite_loss": {"at": [4, 5]}}}
+    s.run.max_consecutive_skipped = 2
+    exp = build_experiment(s)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        r = exp.fit()
+    assert exp.engine.diverged
+    assert "restored the last-good checkpoint" in exp.engine.stop_reason
+    finite = all(np.isfinite(np.asarray(l)).all()
+                 for l in jax.tree_util.tree_leaves(r.params))
+    assert finite
+
+
+def test_divergence_factor_guard_unit():
+    """_check_divergence trips on a finite explosion past factor × the
+    trailing median (unit-level: no need to manufacture a real one)."""
+    spec = preset("ppi_tiny")
+    spec.run.divergence_factor = 5.0
+    exp = build_experiment(spec)
+    eng = exp.engine
+    eng.state = eng.init_state()
+    for _ in range(10):
+        eng._check_divergence(1.0)
+    assert not eng._stop
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eng._check_divergence(100.0)
+    assert eng.diverged
+    assert "exceeded 5x the trailing median" in eng.stop_reason
+
+
+def test_download_faults_through_build_experiment(tmp_path, monkeypatch):
+    """run.faults reaches dataset materialization: downloads injected
+    with transient errors still converge under retry/backoff."""
+    from test_datasets import make_ppi_zip
+
+    mirror = tmp_path / "mirror"
+    mirror.mkdir()
+    make_ppi_zip(mirror / "ppi.zip")
+    monkeypatch.setenv("REPRO_DATASETS_CACHE", str(tmp_path / "cache"))
+    monkeypatch.setenv("REPRO_DATASETS_MIRROR", mirror.as_uri())
+    monkeypatch.setenv("REPRO_DOWNLOAD_BACKOFF", "0.01")
+    spec = preset("ppi_real_tiny")
+    spec.run.epochs = 1
+    spec.run.faults = {"rules": {"download.error": {"times": 2}}}
+    exp = build_experiment(spec)        # downloads under the fault plan
+    assert exp.graph.num_nodes > 0
+
+
+# ----------------------------------------------------------------------
+# 3. the chaos matrix: kill anywhere × fault kind, resume, bitwise
+# ----------------------------------------------------------------------
+def _total_steps(spec):
+    return build_experiment(spec.copy()).batcher.steps_per_epoch() \
+        * spec.run.epochs
+
+
+CHAOS_KINDS = {
+    "sigterm": lambda k: {"sigterm.at_step": {"at": [k]}},
+    "sigterm+corrupt": lambda k: {"sigterm.at_step": {"at": [k]},
+                                  "checkpoint.corrupt_latest": {}},
+    "sigterm+lost_save": lambda k: {
+        "sigterm.at_step": {"at": [k]},
+        "checkpoint.crash_before_rename": {}},
+}
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", sorted(CHAOS_KINDS))
+def test_chaos_matrix_kill_everywhere(kind, tiny_ref, tmp_path):
+    """For EVERY global step k: inject (kill at k [+ degrade every
+    checkpoint]), resume, and require final params bitwise-equal to the
+    never-faulted reference. 'corrupt' flips a bit in every checkpoint
+    shard ever written (resume must quarantine its way back — possibly
+    to a cold start); 'lost_save' makes every save die before its atomic
+    rename (ditto via tmp-sweep)."""
+    spec, ref = tiny_ref
+    rules = CHAOS_KINDS[kind]
+    for k in range(1, _total_steps(spec) + 1):
+        exp1, r2 = _run_faulted_then_resume(
+            spec, tmp_path / f"ck-{kind}-{k}", {"rules": rules(k)})
+        assert _losses(r2) == _losses(ref), (kind, k)
+        assert _params_equal(r2.params, ref.params), (kind, k)
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_chaos_prefetch_crash_everywhere(tiny_ref):
+    """Producer dies silently at every possible occurrence; the one-shot
+    rebuild keeps every run on the reference trajectory."""
+    spec, ref = tiny_ref
+    for k in range(_total_steps(spec) + 2):
+        s = spec.copy()
+        s.execution.prefetch = 2
+        s.run.faults = {"rules": {"prefetch.producer_crash": {"at": [k]}}}
+        r = build_experiment(s).fit()
+        assert _losses(r) == _losses(ref), k
+        assert _params_equal(r.params, ref.params), k

@@ -127,7 +127,8 @@ def _overflow_spec(**overrides) -> ExperimentSpec:
 
 
 def _strip_time(history):
-    return [{k: v for k, v in h.items() if k != "time"} for h in history]
+    return [{k: v for k, v in h.items()
+             if k not in ("time", "flagged_steps")} for h in history]
 
 
 def _assert_params_equal(a, b):

@@ -1,8 +1,13 @@
 """Async batch prefetch (repro.core.prefetch): the background producer
 must be a pure latency optimization — identical batch sequence, losses
 and final params as the synchronous loop — and must propagate errors
-and shut down cleanly on early exit. The 2-device variant proves the
-same for the shard_map DP epoch loop."""
+and shut down cleanly on early exit. The consumer is SUPERVISED: a
+producer that dies silently or goes quiet raises a diagnosable
+PrefetchError (or is rebuilt once) instead of blocking the training
+step forever. The 2-device variant proves trajectory equality for the
+shard_map DP epoch loop."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,8 +15,10 @@ import pytest
 
 from repro.core import (ClusterBatcher, GCNConfig, prefetch_iter,
                         train_cluster_gcn)
+from repro.core.prefetch import PrefetchError
 from repro.graph import make_dataset, partition_graph
 from repro.nn import adamw
+from repro.runtime.faults import FaultPlan, FaultRule, fault_scope
 
 
 def test_prefetch_iter_preserves_order_and_applies_transfer():
@@ -45,6 +52,55 @@ def test_prefetch_iter_early_exit_stops_producer():
     while threading.active_count() > before and time.time() < deadline:
         time.sleep(0.05)
     assert threading.active_count() <= before + 1
+
+
+def test_silent_producer_crash_raises_not_hangs():
+    """A producer that dies without posting _DONE/_ERR (OOM-killed, a
+    bug swallowing BaseException) must surface as PrefetchError within
+    ~poll_interval, not block q.get forever."""
+    plan = FaultPlan(rules={"prefetch.producer_crash": FaultRule(at=(3,))})
+    t0 = time.perf_counter()
+    with fault_scope(plan):
+        with pytest.raises(PrefetchError, match="producer_crash") as ei:
+            list(prefetch_iter(iter(range(10)), 2, poll_interval=0.05))
+    assert ei.value.site == "prefetch.producer_crash"
+    assert time.perf_counter() - t0 < 10.0
+
+
+def test_silent_crash_rebuild_resumes_exact_sequence():
+    """With a rebuild callback the consumer respawns the producer ONCE
+    from the first unconsumed item — the yielded sequence is exactly
+    the unfaulted one."""
+    plan = FaultPlan(rules={"prefetch.producer_crash": FaultRule(at=(3,))})
+    with fault_scope(plan):
+        got = list(prefetch_iter(
+            iter(range(10)), 2, poll_interval=0.05,
+            rebuild=lambda consumed: iter(range(consumed, 10))))
+    assert got == list(range(10))
+
+
+def test_rebuild_is_one_shot():
+    """A producer that keeps dying exhausts the single rebuild and then
+    raises — no infinite respawn loop."""
+    plan = FaultPlan(rules={"prefetch.producer_crash": FaultRule()})
+    with fault_scope(plan):
+        with pytest.raises(PrefetchError, match="producer_crash"):
+            list(prefetch_iter(
+                iter(range(10)), 2, poll_interval=0.05,
+                rebuild=lambda consumed: iter(range(consumed, 10))))
+
+
+def test_hung_producer_raises_after_hang_timeout():
+    """Alive-but-silent (stuck I/O, deadlock): the heartbeat monitor
+    trips after hang_timeout and names the site."""
+    plan = FaultPlan(rules={"prefetch.producer_hang": FaultRule(at=(2,))})
+    t0 = time.perf_counter()
+    with fault_scope(plan):
+        with pytest.raises(PrefetchError, match="producer_hang"):
+            list(prefetch_iter(iter(range(10)), 2, poll_interval=0.05,
+                               hang_timeout=0.5))
+    elapsed = time.perf_counter() - t0
+    assert 0.4 < elapsed < 10.0
 
 
 def _setup():

@@ -62,6 +62,66 @@ def test_atomicity_no_partial_checkpoints(tmp_path, tree):
     assert m.steps() == [1]
 
 
+def test_latest_valid_step_quarantines_corrupt(tmp_path, tree):
+    """A corrupt newest checkpoint is renamed aside (step_N.corrupt-*)
+    with a warning and restore falls back to the previous good step —
+    the self-healing restore path (docs/robustness.md)."""
+    m = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    m.save(1, tree)
+    m.save(2, jax.tree_util.tree_map(lambda x: x + 1, tree))
+    shard = tmp_path / "step_0000000002" / "shard_0.npz"
+    raw = bytearray(shard.read_bytes())
+    # flip a bit inside actual ARRAY DATA (the stored value 6.0 =
+    # 0x40c00000 LE), not zip/npy framing: header padding flips can be
+    # benign, and zipfile only checks member CRCs at EOF anyway
+    off = raw.find(b"\x00\x00\xc0\x40")
+    assert off > 0
+    raw[off + 1] ^= 0x01
+    shard.write_bytes(bytes(raw))
+    with pytest.warns(UserWarning, match="quarantined"):
+        assert m.latest_valid_step() == 1
+    assert m.steps() == [1]
+    assert any(".corrupt-" in p.name for p in tmp_path.iterdir())
+    out = m.restore(tree)       # default step now resolves to 1
+    np.testing.assert_allclose(np.asarray(out["params"]["w"]),
+                               np.asarray(tree["params"]["w"]))
+
+
+def test_latest_valid_step_none_when_all_corrupt(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    m.save(1, tree)
+    shard = tmp_path / "step_0000000001" / "shard_0.npz"
+    shard.write_bytes(b"not a zip")
+    with pytest.warns(UserWarning, match="quarantined"):
+        assert m.latest_valid_step() is None
+    with pytest.raises(FileNotFoundError, match="no valid checkpoints"):
+        m.restore(tree)
+
+
+def test_manager_init_sweeps_stale_tmp_dirs(tmp_path, tree):
+    """A crash between snapshot and atomic rename leaves step_*.tmp-*;
+    the next manager init deletes it (satellite of the fault-injection
+    PR — previously it leaked forever)."""
+    stale = tmp_path / "step_0000000007.tmp-deadbeef"
+    stale.mkdir(parents=True)
+    (stale / "shard_0.npz").write_bytes(b"partial")
+    CheckpointManager(str(tmp_path), keep=3)
+    assert not stale.exists()
+
+
+def test_missing_manifest_array_fails_verification(tmp_path, tree):
+    """verify_step catches a manifest/shard mismatch, not just CRC."""
+    m = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    m.save(1, tree)
+    p = tmp_path / "step_0000000001" / "shard_0.npz"
+    z = np.load(p)
+    arrs = {k: z[k] for k in z.files}
+    arrs.pop("params__w")
+    np.savez(p, **arrs)
+    with pytest.raises(IOError, match="missing from shard"):
+        m.verify_step(1)
+
+
 def test_straggler_flags_slow_host():
     sd = StragglerDetector(threshold=1.5)
     flagged = []
@@ -70,6 +130,17 @@ def test_straggler_flags_slow_host():
     assert flagged == [2]
     s = sd.fleet_summary()
     assert s["skew"] > 1.5
+
+
+def test_straggler_flag_step_single_host():
+    """The per-step variant the Engine feeds: warmup steps never flag,
+    then a step past threshold × trailing median does — and the flagged
+    step itself doesn't poison the median it was judged against."""
+    sd = StragglerDetector(threshold=1.5, warmup=8)
+    assert not any(sd.flag_step(1.0) for _ in range(8))   # warmup
+    assert not sd.flag_step(1.2)
+    assert sd.flag_step(2.0)
+    assert not sd.flag_step(1.0)    # median still ~1.0 despite the spike
 
 
 def test_heartbeat_detects_dead_host():

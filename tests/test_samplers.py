@@ -231,7 +231,8 @@ def _cora_saint_spec(kind, **overrides) -> ExperimentSpec:
 
 
 def _strip_time(history):
-    return [{k: v for k, v in h.items() if k != "time"} for h in history]
+    return [{k: v for k, v in h.items()
+             if k not in ("time", "flagged_steps")} for h in history]
 
 
 def _assert_params_equal(a, b):
@@ -289,7 +290,8 @@ def saint_spec(overrides=None):
     return apply_overrides(spec, overrides or {})
 
 def strip_time(history):
-    return [{k: v for k, v in h.items() if k != "time"} for h in history]
+    return [{k: v for k, v in h.items()
+             if k not in ("time", "flagged_steps")} for h in history]
 
 base = {"execution.data_shards": 2}
 straight = build_experiment(saint_spec(base)).fit()
