@@ -1,0 +1,114 @@
+"""Serving-path latency benchmark: per-cluster embedding cache + jit'd
+query step (repro.serve, docs/serving.md "latency methodology").
+
+Measures, on a trained ppi_tiny checkpoint (trained in-process into a
+temp dir unless --checkpoint points at an existing one):
+
+  * cold-cache precompute time (one blocked full-graph pass, all
+    clusters stored) — row serve/ppi_tiny/precompute on `seconds`;
+  * per-bucket query latency: for each padding-bucket size, many
+    repeated warm-cache queries of random node batches; rows
+    serve/ppi_tiny/bucket<B> carry p50_s (the check_regression
+    comparable, lower-is-better) plus p50_ms/p99_ms/qps extras.
+
+Latency is the full pad → jit step → block_until_ready → host round
+trip per `ServeEngine.query` call, after one untimed compile query per
+bucket — the same methodology launch.serve_gcn reports, just with
+enough iterations for stable percentiles. CI runs `--quick`, compares
+the bucket1 row against the committed BENCH_serve.json with a generous
+tolerance (shared runners are noisy), and uploads the fresh file as an
+artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import section, write_bench_json
+
+PRESET = "ppi_tiny"
+TRAIN_EPOCHS = 2
+
+
+def _ensure_checkpoint(ckpt_dir: str) -> None:
+    from repro.core.experiment import apply_overrides, build_experiment, preset
+    from repro.runtime.checkpoint import CheckpointManager
+    if CheckpointManager(ckpt_dir).latest_valid_step() is not None:
+        return
+    spec = apply_overrides(preset(PRESET),
+                           {"run.epochs": TRAIN_EPOCHS,
+                            "run.checkpoint_dir": ckpt_dir})
+    build_experiment(spec).fit()
+
+
+def run(quick: bool = True, checkpoint: str | None = None,
+        out: str | None = None) -> dict:
+    from repro.core.experiment import preset
+    from repro.serve import ServeEngine
+
+    section("serving: cluster-keyed cache + jit'd query step")
+    if checkpoint is None:
+        tmp = tempfile.mkdtemp(prefix="bench-serve-ck-")
+        checkpoint = str(pathlib.Path(tmp) / "checkpoints")
+    _ensure_checkpoint(checkpoint)
+    spec = preset(PRESET)
+    cache_root = tempfile.mkdtemp(prefix="bench-serve-cache-")
+    engine = ServeEngine.from_checkpoint(spec, checkpoint,
+                                         cache_root=cache_root)
+    n = engine.graph.num_nodes
+    rng = np.random.default_rng(0)
+    rows = []
+
+    t0 = time.perf_counter()
+    warmed = engine.warm()
+    precompute_s = time.perf_counter() - t0
+    rows.append({"name": f"serve/{PRESET}/precompute",
+                 "seconds": precompute_s, "clusters": warmed})
+    print(f"precompute,{precompute_s * 1e6:.1f},{warmed} clusters")
+
+    iters = 30 if quick else 200
+    for bucket in engine.buckets:
+        engine.query(rng.integers(0, n, size=bucket))   # compile, untimed
+        lats = []
+        for _ in range(iters):
+            r = engine.query(rng.integers(0, n, size=bucket))
+            lats.append(r.latency_s)
+        p50 = float(np.percentile(lats, 50))
+        p99 = float(np.percentile(lats, 99))
+        qps = bucket / p50
+        rows.append({"name": f"serve/{PRESET}/bucket{bucket}",
+                     "p50_s": p50, "p50_ms": p50 * 1e3,
+                     "p99_ms": p99 * 1e3, "qps": qps,
+                     "requests": iters})
+        print(f"bucket{bucket},{p50 * 1e6:.1f},p99 {p99 * 1e3:.3f} ms "
+              f"/ {qps:,.0f} qps")
+
+    record = {"bench": "serve", "preset": PRESET, "quick": quick,
+              "checkpoint_step": engine.cache.checkpoint_step,
+              "buckets": list(engine.buckets), "rows": rows}
+    p = write_bench_json("serve", record, path=out)
+    print(f"wrote {p}")
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer iterations (the CI setting)")
+    ap.add_argument("--checkpoint",
+                    help="existing checkpoint dir (default: train "
+                         f"{PRESET} for {TRAIN_EPOCHS} epochs in a "
+                         "temp dir)")
+    ap.add_argument("--out", help="output path (default "
+                                  "BENCH_serve.json in the CWD)")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, checkpoint=args.checkpoint, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

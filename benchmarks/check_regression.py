@@ -15,8 +15,10 @@ compared on that RATIO (same-machine normalized — robust to CI runners
 being slower or faster than the machine that committed the baseline;
 `ratio` also covers machine-independent quantities like the deep-GCN
 peak-memory reduction, whose temp-bytes inputs depend only on the
-compiler); rows without either fall back to wall-clock seconds, which
-only makes sense when both files come from comparable machines.
+compiler); rows carrying `p50_s` (serving latency, lower-is-better —
+launch.serve_gcn --bench-out) compare on that; rows without any fall
+back to wall-clock seconds. The wall-clock branches only make sense
+when both files come from comparable machines.
 
 Bootstrapping: a MISSING baseline file is not a regression — a fresh
 branch (or a repo that never committed BENCH_*.json) has nothing to
@@ -63,7 +65,7 @@ def _index(path: str, role: str) -> dict:
 def _metric(row: dict, path: str, name: str) -> tuple[str, float, bool]:
     """(metric key, value, higher_is_better) for a row, or GateError."""
     for key, higher in (("speedup_vs_dense", True), ("ratio", True),
-                        ("seconds", False)):
+                        ("p50_s", False), ("seconds", False)):
         if key in row:
             return key, float(row[key]), higher
     raise GateError(

@@ -39,7 +39,7 @@ import signal as _signal
 import time
 import warnings
 from typing import (Any, Callable, Dict, Iterator, List, Optional, Protocol,
-                    Sequence, Tuple, runtime_checkable)
+                    Sequence, Tuple, Union, runtime_checkable)
 
 import jax
 import numpy as np
@@ -57,6 +57,12 @@ from repro.runtime import faults
 from repro.runtime.resilience import StragglerDetector
 
 PyTree = Any
+
+# deepest depth execution.prefetch="auto" will ever pick: past ~4
+# queued batches the producer thread is saturated and extra depth only
+# holds more payload memory live (it also bounds the tile-pool aliasing
+# check for auto runs, which must budget for the worst case up front)
+AUTO_PREFETCH_MAX = 4
 
 # fit() must NOT clear an externally-installed fault plan when the
 # engine itself has none (chaos tests install plans around fit), so the
@@ -437,7 +443,7 @@ class Engine:
 
     def __init__(self, batcher: Sampler, cfg: GCNConfig,
                  backend: StepBackend, *, epochs: int, seed: int = 0,
-                 prefetch: int = 0, hooks: Sequence = (),
+                 prefetch: Union[int, str] = 0, hooks: Sequence = (),
                  checkpoint=None, fault_plan=None,
                  max_consecutive_skipped: Optional[int] = None,
                  divergence_factor: Optional[float] = None,
@@ -451,6 +457,13 @@ class Engine:
                 "layer 1 would silently skip propagation on raw "
                 "features. Rebuild the sampler with precompute_ax=True "
                 "(ExperimentSpec.build_batcher does this automatically).")
+        # prefetch="auto": start synchronous, measure the host-build /
+        # device-step ratio over a warmup epoch, then pick the depth
+        # (see _auto_prefetch_depth). Until measured, depth is 0.
+        self.prefetch_auto = prefetch == "auto"
+        self.prefetch = 0 if self.prefetch_auto else int(prefetch)
+        self._auto_depth: Optional[int] = None
+        self._auto_ratio: Optional[float] = None
         pool = getattr(batcher, "_tile_pool", None)
         if pool is not None:
             # TileBufferPool recycles a buffer after `depth` further
@@ -463,7 +476,11 @@ class Engine:
             # built (data parallel — raw pooled payloads are only
             # retained inside the group; firsts/stacks are copies).
             group = int(getattr(backend, "group_size", 1))
-            need = group + 1 if group > 1 else int(prefetch) + 2
+            # auto prefetch must budget for the deepest depth it may
+            # ever pick, not the warmup's 0
+            depth_bound = (AUTO_PREFETCH_MAX if self.prefetch_auto
+                           else self.prefetch)
+            need = group + 1 if group > 1 else depth_bound + 2
             live = pool.depth // 2
             if live < need:
                 raise ValueError(
@@ -472,7 +489,7 @@ class Engine:
                     f"flight ("
                     + (f"data-parallel group of {group} + 1 being built"
                        if group > 1 else
-                       f"prefetch={int(prefetch)} queued + 2 in flight")
+                       f"prefetch={depth_bound} queued + 2 in flight")
                     + ") — recycled buffers would alias live payloads "
                     f"and silently corrupt training. Deepen the pool "
                     f"(TileBufferPool(depth={2 * need}) on the sampler), "
@@ -483,7 +500,6 @@ class Engine:
         self.backend = backend
         self.epochs = int(epochs)
         self.seed = int(seed)
-        self.prefetch = int(prefetch)
         self.hooks = list(hooks)
         self.checkpoint = checkpoint
         # fault injection + divergence guards (runtime.faults /
@@ -688,6 +704,32 @@ class Engine:
                 if self.fault_plan is not None else _NULL_CTX:
             return self._fit(resume)
 
+    @staticmethod
+    def _timed_iter(it: Iterator, acc: List[float]) -> Iterator:
+        """Pass-through iterator accumulating time spent inside
+        next(it) into acc[0] — measures host-side batch build (group/
+        stack included, since it wraps the backend stream) during the
+        auto-prefetch warmup epoch."""
+        while True:
+            t = time.perf_counter()
+            try:
+                item = next(it)
+            except StopIteration:
+                return
+            acc[0] += time.perf_counter() - t
+            yield item
+
+    @staticmethod
+    def _auto_prefetch_depth(ratio: float) -> int:
+        """host_build_over_step ratio → prefetch depth. Below 5% the
+        producer thread costs more than it hides (stay synchronous);
+        above, queue ~2x the ratio so one builder stays ahead of
+        device steps, capped at AUTO_PREFETCH_MAX (a saturated single
+        producer gains nothing from a deeper queue)."""
+        if ratio < 0.05:
+            return 0
+        return max(1, min(AUTO_PREFETCH_MAX, int(np.ceil(2.0 * ratio))))
+
     def _fit(self, resume: bool) -> TrainResult:
         restored = resume and self._try_restore()
         if resume and not restored:
@@ -716,7 +758,12 @@ class Engine:
         seam = (self._start_seam
                 and int(getattr(self.backend, "group_size", 1)) == 1)
 
-        transfer = jax.device_put if self.prefetch > 0 else None
+        if self.prefetch_auto:
+            # re-measure on every fit() call — prefetch is bitwise-
+            # transparent to the trajectory, so a resumed run picking a
+            # different depth than the original is harmless
+            self._auto_depth = None
+            self._auto_ratio = None
         t0 = time.perf_counter()
         fit_error: Optional[BaseException] = None
         try:
@@ -738,8 +785,18 @@ class Engine:
                         next(stream, None)
                     step_in_epoch = skip_steps
                 skip_steps = 0
+                # auto: synchronous warmup epoch (depth 0) until the
+                # build/step ratio is measured, then the tuned depth
+                measuring = self.prefetch_auto and self._auto_depth is None
+                effective = ((self._auto_depth or 0) if self.prefetch_auto
+                             else self.prefetch)
+                transfer = jax.device_put if effective > 0 else None
+                build_acc = [0.0]
+                step_total = 0.0
+                if measuring:
+                    stream = self._timed_iter(stream, build_acc)
                 rebuild = None
-                if seam and self.prefetch > 0:
+                if seam and effective > 0:
                     # one-shot producer restart after a silent prefetch
                     # crash: rebuild the epoch tail right after the
                     # `consumed` payloads already trained on
@@ -748,7 +805,7 @@ class Engine:
                             _e, start_step=_s + consumed))
                 flagged = 0
                 for payload in prefetch_iter(
-                        stream, self.prefetch, transfer=transfer,
+                        stream, effective, transfer=transfer,
                         hang_timeout=self.prefetch_timeout,
                         rebuild=rebuild):
                     t_step = time.perf_counter()
@@ -759,8 +816,9 @@ class Engine:
                     self.global_step += 1
                     step_in_epoch += 1
                     self._position = (epoch, step_in_epoch, losses, auxes)
-                    if self.straggler.flag_step(
-                            time.perf_counter() - t_step):
+                    dt_step = time.perf_counter() - t_step
+                    step_total += dt_step
+                    if self.straggler.flag_step(dt_step):
                         flagged += 1
                     if self._guards_on:
                         self._check_divergence(loss)
@@ -781,6 +839,15 @@ class Engine:
                         self.save_checkpoint(blocking=True)
                     break
                 rec = self._epoch_record(epoch, losses, auxes, t0, flagged)
+                if self.prefetch_auto:
+                    # wall-time diagnostics like "time"/"flagged_steps":
+                    # resumed-run comparisons strip them the same way
+                    rec["prefetch_depth"] = effective
+                    if measuring and step_total > 0:
+                        self._auto_ratio = build_acc[0] / step_total
+                        self._auto_depth = self._auto_prefetch_depth(
+                            self._auto_ratio)
+                        rec["host_build_over_step"] = self._auto_ratio
                 self.history.append(rec)
                 self._position = (epoch + 1, 0, [], [])
                 losses, auxes = [], []

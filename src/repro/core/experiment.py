@@ -32,6 +32,9 @@ Sections (all plain dataclasses, JSON ↔ dataclass via to_json/from_json):
              knobs (docs/robustness.md): faults (chaos-testing fault
              plan) and the divergence guards
              (max_consecutive_skipped / divergence_factor)
+  serve      serving-layer knobs (repro.serve): embedding cache_dir,
+             query max_batch + padding bucket ladder, top_k, the live-
+             growth imbalance_threshold — ignored by training
 
 The resolved spec JSON is the reproducibility artifact: run drivers
 (repro.launch.run_experiment) write it next to the metrics, and
@@ -262,10 +265,13 @@ class ExecutionSpec:
                            "(DP mesh only): each shard scans this many "
                            "batches per optimizer step, so only one "
                            "chunk's backward graph is live at a time")
-    prefetch: int = _f(0, "batches built ahead on a background thread "
-                       "(incl. DP stacking + device_put); 0 is fully "
-                       "synchronous — trajectories are identical "
-                       "either way")
+    prefetch: Union[int, str] = _f(
+        0, "batches built ahead on a background thread (incl. DP "
+        "stacking + device_put); 0 is fully synchronous, 'auto' "
+        "measures the host-build/device-step time ratio during a "
+        "synchronous warmup epoch and picks the depth itself (logged "
+        "per epoch as prefetch_depth/host_build_over_step in history "
+        "rows) — trajectories are identical for every setting")
     prefetch_timeout_s: float = _f(600.0, "seconds a training step may "
                                    "wait on the prefetch producer before "
                                    "the run aborts with a diagnosable "
@@ -307,9 +313,40 @@ class RunSpec:
         "(must be > 1 when set)")
 
 
+@dataclasses.dataclass
+class ServeSpec:
+    """Serving-layer configuration (repro.serve / launch.serve_gcn):
+    per-cluster embedding cache + jit'd query path. Training ignores
+    this section entirely — it exists so one spec JSON describes both
+    halves of a model's life and serving inherits the training run's
+    dataset/partition/normalization without re-stating them."""
+    cache_dir: Optional[str] = _f(None, "root of the per-cluster "
+                                  "embedding cache; None uses "
+                                  "<dataset cache root>/serving/<spec "
+                                  "name> (the $REPRO_DATASETS_CACHE "
+                                  "tree)")
+    max_batch: int = _f(256, "largest query batch answered in one "
+                        "jit'd step; bigger requests are chunked")
+    buckets: Optional[List[int]] = _f(None, "explicit request-padding "
+                                      "bucket ladder (ascending); None "
+                                      "derives (1, 8, 64, ..., "
+                                      "pow2(max_batch)) — each bucket "
+                                      "is one compiled shape, so a "
+                                      "short ladder bounds "
+                                      "recompilation at ≤2x padding "
+                                      "waste")
+    top_k: int = _f(5, "classes returned per query (clamped to the "
+                    "model's out_dim)")
+    imbalance_threshold: float = _f(2.0, "max/mean cluster-size ratio "
+                                    "past which live growth triggers "
+                                    "the re-partition warning (must "
+                                    "be > 1; warn-only)")
+
+
 _SECTIONS = {"data": DataSpec, "partition": PartitionSpec,
              "batch": BatchSpec, "model": ModelSpec, "optim": OptimSpec,
-             "execution": ExecutionSpec, "run": RunSpec}
+             "execution": ExecutionSpec, "run": RunSpec,
+             "serve": ServeSpec}
 
 
 @dataclasses.dataclass
@@ -324,6 +361,7 @@ class ExperimentSpec:
     execution: ExecutionSpec = dataclasses.field(
         default_factory=ExecutionSpec)
     run: RunSpec = dataclasses.field(default_factory=RunSpec)
+    serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
 
     # -- JSON round trip ------------------------------------------------
     def to_dict(self) -> Dict:
@@ -447,7 +485,22 @@ def validate(spec: ExperimentSpec) -> ExperimentSpec:
     check(spec.optim.name in _OPTIMIZERS, "optim.name",
           f"must be one of {_OPTIMIZERS}; got {spec.optim.name!r}")
     check(spec.run.epochs >= 1, "run.epochs", ">= 1")
-    check(spec.execution.prefetch >= 0, "execution.prefetch", ">= 0")
+    pf = spec.execution.prefetch
+    check(pf == "auto" or (isinstance(pf, int) and pf >= 0),
+          "execution.prefetch", f"must be 'auto' or an int >= 0; "
+          f"got {pf!r}")
+    check(spec.serve.max_batch >= 1, "serve.max_batch", ">= 1")
+    check(spec.serve.top_k >= 1, "serve.top_k", ">= 1")
+    check(spec.serve.imbalance_threshold > 1.0,
+          "serve.imbalance_threshold", "> 1")
+    bks = spec.serve.buckets
+    check(bks is None or (len(bks) > 0
+                          and all(isinstance(b, int) and b >= 1
+                                  for b in bks)
+                          and list(bks) == sorted(set(bks))),
+          "serve.buckets",
+          f"must be None or a strictly ascending list of ints >= 1; "
+          f"got {bks!r}")
     ds = spec.execution.data_shards
     check(ds is None or ds >= 1, "execution.data_shards",
           "must be None or >= 1")

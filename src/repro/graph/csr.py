@@ -154,6 +154,84 @@ class CSRGraph:
         return CSRGraph(**kw)
 
 
+def append_graph(graph: CSRGraph, *, num_new_nodes: int = 0,
+                 src: Array = (), dst: Array = (),
+                 features: Optional[Array] = None,
+                 labels: Optional[Array] = None) -> CSRGraph:
+    """Append new nodes and undirected edges — the live-update primitive
+    behind repro.serve.deltas.GraphDelta.
+
+    New nodes get ids N..N+num_new_nodes-1; `src`/`dst` may connect any
+    mix of existing and new ids. Self-loops are dropped and duplicate
+    (u, v) slots are deduped with the EXISTING edge's weight winning, so
+    re-announcing a known edge is a no-op. Returns a NEW CSRGraph (the
+    input is never mutated — serving keeps querying the old graph until
+    the swap). New nodes extend the masks with False and, when the graph
+    is labeled but `labels` is not given, get all-zero labels (a served
+    node's labels are what the model predicts, not an input). The node
+    feature matrix is materialized by the concat, so an mmap'd
+    Amazon2M-scale feature file is paged in on first append — acceptable
+    for the in-session delta overlay this implements, not for bulk
+    re-ingestion (use the dataset loaders for that)."""
+    n_old = graph.num_nodes
+    n_new = n_old + int(num_new_nodes)
+    src = np.asarray(src, dtype=np.int64).ravel()
+    dst = np.asarray(dst, dtype=np.int64).ravel()
+    if src.shape != dst.shape:
+        raise ValueError(f"src/dst length mismatch: {len(src)} vs "
+                         f"{len(dst)}")
+    if len(src) and (min(src.min(), dst.min()) < 0
+                     or max(src.max(), dst.max()) >= n_new):
+        raise ValueError(
+            f"edge endpoint out of range [0, {n_new}) — new nodes must "
+            f"be announced via num_new_nodes before edges reference them")
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    # old COO + both directions of the new edges, old slots FIRST so the
+    # first-occurrence dedupe keeps existing weights
+    old_rows = np.repeat(np.arange(n_old, dtype=np.int64), graph.degrees)
+    all_src = np.concatenate([old_rows, src, dst])
+    all_dst = np.concatenate([graph.indices.astype(np.int64), dst, src])
+    all_w = np.concatenate([graph.data,
+                            np.ones(2 * len(src), np.float32)])
+    key = all_src * n_new + all_dst
+    uniq, first = np.unique(key, return_index=True)
+    rows2 = (uniq // n_new).astype(np.int64)
+    cols2 = (uniq % n_new).astype(np.int32)
+    vals2 = all_w[first]
+    indptr = np.zeros(n_new + 1, dtype=np.int64)
+    np.add.at(indptr, rows2 + 1, 1)
+    indptr = np.cumsum(indptr)
+
+    def _extend(arr, new_rows, what):
+        if arr is None:
+            return None
+        if num_new_nodes == 0:
+            return arr
+        if new_rows is None:
+            pad_shape = (num_new_nodes,) + arr.shape[1:]
+            new_rows = np.zeros(pad_shape, dtype=arr.dtype)
+        new_rows = np.asarray(new_rows, dtype=arr.dtype)
+        if new_rows.shape != (num_new_nodes,) + arr.shape[1:]:
+            raise ValueError(
+                f"{what} for the {num_new_nodes} new node(s) must have "
+                f"shape {(num_new_nodes,) + arr.shape[1:]}; got "
+                f"{new_rows.shape}")
+        return np.concatenate([np.asarray(arr), new_rows])
+
+    if graph.features is not None and num_new_nodes and features is None:
+        raise ValueError(f"the graph has features but none were given "
+                         f"for the {num_new_nodes} new node(s)")
+    false_pad = (np.zeros(num_new_nodes, bool) if num_new_nodes else None)
+    return CSRGraph(
+        indptr=indptr, indices=cols2, data=vals2,
+        features=_extend(graph.features, features, "features"),
+        labels=_extend(graph.labels, labels, "labels"),
+        train_mask=_extend(graph.train_mask, false_pad, "train_mask"),
+        val_mask=_extend(graph.val_mask, false_pad, "val_mask"),
+        test_mask=_extend(graph.test_mask, false_pad, "test_mask"))
+
+
 def edge_cut(graph: CSRGraph, parts: Array) -> int:
     """Number of directed edge slots crossing partitions."""
     parts = np.asarray(parts)

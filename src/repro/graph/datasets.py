@@ -86,6 +86,13 @@ def cache_root() -> pathlib.Path:
     return pathlib.Path.home() / ".cache" / "repro-datasets"
 
 
+def default_serving_cache_dir() -> pathlib.Path:
+    """Per-cluster serving embedding caches (repro.serve) share the
+    dataset cache root, so one env var ($REPRO_DATASETS_CACHE)
+    relocates datasets, partitions and serving state together."""
+    return cache_root() / "serving"
+
+
 # ----------------------------------------------------------------------
 # download + checksum layer
 # ----------------------------------------------------------------------

@@ -321,6 +321,21 @@ def graph_fingerprint(graph: CSRGraph) -> str:
     return h.hexdigest()[:20]
 
 
+def partition_fingerprint(graph: CSRGraph, parts: np.ndarray) -> str:
+    """Content hash of (graph structure, cluster assignment) — the key
+    for anything derived from a PARTITIONED graph, e.g. the serving
+    layer's per-cluster embedding cache (keyed on this plus the
+    checkpoint step). Changing either the graph or the assignment
+    changes the fingerprint, so stale derived artifacts can never be
+    served."""
+    h = hashlib.sha256()
+    h.update(graph_fingerprint(graph).encode())
+    p = np.ascontiguousarray(np.asarray(parts, dtype=np.int64))
+    h.update(f"parts:{p.shape}".encode())
+    h.update(p.tobytes())
+    return h.hexdigest()[:20]
+
+
 def default_partition_cache_dir() -> pathlib.Path:
     """Partitions share the dataset cache root (repro.graph.datasets),
     so one env var ($REPRO_DATASETS_CACHE) relocates both."""

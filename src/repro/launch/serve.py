@@ -1,4 +1,9 @@
-"""Serving launcher: batched prefill + greedy decode loop.
+"""LANGUAGE-MODEL serving demo: batched prefill + greedy decode loop
+over the transformer stack (repro.models.lm) — NOT the Cluster-GCN
+serving layer. GCN predictions are served by `repro.launch.serve_gcn`
+(per-cluster embedding cache + jit'd query path, docs/serving.md);
+this module is the KV-cache prefill/decode demo kept from the
+sharding-infrastructure PRs and exercised by examples/serve_lm.py.
 
 CPU smoke run:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \

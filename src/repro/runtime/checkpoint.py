@@ -39,7 +39,7 @@ import time
 import uuid
 import warnings
 import zlib
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -277,3 +277,78 @@ class CheckpointManager:
             else:
                 out.append(jax.device_put(arr))
         return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    # inference loads: params only, optimizer/RNG state skipped
+    # ------------------------------------------------------------------
+    def restore_subtree(self, target_tree: PyTree, prefix: str,
+                        step: Optional[int] = None
+                        ) -> Tuple[PyTree, int]:
+        """Restore ONLY the arrays under `prefix/` into the structure of
+        `target_tree` — the inference-load path: a serving process wants
+        params without paying to read (or hold) the optimizer moments
+        and RNG state the training checkpoint also carries.
+
+        Same self-healing semantics as restore(): step=None walks back
+        from the newest step, quarantining corrupt candidates, exactly
+        like Engine.fit(resume=True); an explicit step is loaded as-is
+        and raises on corruption. Returns (tree, step) — the caller
+        usually needs the resolved step (e.g. as an embedding-cache
+        key)."""
+        step = step if step is not None else self.latest_valid_step()
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "shard_0.npz")
+        flat_t = _flatten_with_paths(target_tree)
+        treedef = jax.tree_util.tree_structure(target_tree)
+        out = []
+        for key, ref in flat_t:
+            full = f"{prefix}/{key}" if prefix else key
+            info = manifest["arrays"].get(full)
+            if info is None:
+                roots = sorted({k.split("/")[0]
+                                for k in manifest["arrays"]})
+                raise KeyError(
+                    f"checkpoint step {step} has no array {full!r} "
+                    f"(top-level prefixes present: {roots})")
+            arr = data[full.replace("/", "__")]
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != info["crc32"]:
+                raise IOError(f"checksum mismatch for {full!r} "
+                              f"(corrupt checkpoint step {step})")
+            if list(arr.shape) != list(np.shape(ref)):
+                raise ValueError(
+                    f"shape mismatch for {full!r}: ckpt {arr.shape} vs "
+                    f"target {np.shape(ref)}")
+            out.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), step
+
+    # where each Engine backend keeps the model params in its state tree
+    # (SingleDeviceBackend / ShardMapBackend layouts)
+    _PARAM_PREFIXES = ("params", "dist/params")
+
+    def restore_params(self, template_params: PyTree,
+                       step: Optional[int] = None) -> Tuple[PyTree, int]:
+        """Params-only inference load from an Engine checkpoint,
+        whichever backend wrote it: finds the params subtree under
+        'params/' (single device) or 'dist/params/' (shard_map DP) and
+        restores just that. step=None self-heals like
+        Engine.fit(resume=True) — corrupt-newest steps are quarantined
+        and the previous good one is used. Returns (params, step)."""
+        step = step if step is not None else self.latest_valid_step()
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoints in {self.dir}")
+        manifest = json.loads(
+            (self.dir / f"step_{step:010d}" / "manifest.json").read_text())
+        for prefix in self._PARAM_PREFIXES:
+            if any(k.startswith(prefix + "/")
+                   for k in manifest["arrays"]):
+                return self.restore_subtree(template_params, prefix,
+                                            step=step)
+        roots = sorted({k.split("/")[0] for k in manifest["arrays"]})
+        raise KeyError(
+            f"checkpoint step {step} has no params subtree under any of "
+            f"{self._PARAM_PREFIXES} (top-level prefixes: {roots}) — was "
+            f"it written by Engine.fit?")

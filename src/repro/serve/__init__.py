@@ -1,0 +1,21 @@
+"""Serving layer: cluster-keyed embedding cache, jit'd query path, and
+live graph updates.
+
+The cluster partition that makes Cluster-GCN training efficient is also
+the serving system's unit of everything: embeddings are precomputed and
+cached per cluster (`embedding_cache`), queries route by cluster and
+pad into pow2 buckets for a jit'd probs/top-k step (`engine`), and live
+graph updates invalidate exactly the clusters they touch (`deltas`).
+See docs/serving.md for the cache-key scheme, invalidation rules and
+latency methodology; `launch/serve_gcn.py` is the CLI front door.
+"""
+from repro.serve.deltas import BalanceMonitor, GraphDelta, apply_delta
+from repro.serve.embedding_cache import (EmbeddingCache, embed_cluster,
+                                         full_graph_embeddings)
+from repro.serve.engine import ServeEngine, ServeResult
+
+__all__ = [
+    "BalanceMonitor", "GraphDelta", "apply_delta",
+    "EmbeddingCache", "embed_cluster", "full_graph_embeddings",
+    "ServeEngine", "ServeResult",
+]

@@ -1,0 +1,115 @@
+"""Live graph updates for the serving layer.
+
+A `GraphDelta` is a small batch of new nodes/edges appended to the
+served graph. Applying one is cheap on purpose: the CSR is rebuilt
+host-side (`graph.csr.append_graph`), new nodes are assigned to the
+majority cluster among their already-assigned neighbors (the greedy
+streaming heuristic — METIS quality is not needed for a handful of
+nodes), and ONLY the clusters actually touched by the delta have their
+cached embeddings invalidated. Everything else keeps serving cached
+bytes unchanged.
+
+`BalanceMonitor` watches the side effect of that laziness: greedy
+assignment slowly skews cluster sizes, and Cluster-GCN's whole premise
+(paper §3.1) is that per-cluster work is roughly uniform. When the
+max/mean size ratio passes the threshold the monitor warns and fires
+the optional re-partition hook — warn-only for now; a real deployment
+would schedule a background METIS re-partition + cache rebuild there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph, append_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """A batch of live updates: `num_new_nodes` new nodes (ids assigned
+    densely after the current max) plus undirected edges src[i]—dst[i]
+    over any mix of old and new ids. `features` must cover the new
+    nodes when the graph has node features."""
+    src: Tuple[int, ...] = ()
+    dst: Tuple[int, ...] = ()
+    num_new_nodes: int = 0
+    features: Optional[np.ndarray] = None
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.src)
+
+
+def apply_delta(graph: CSRGraph, parts: np.ndarray, delta: GraphDelta
+                ) -> Tuple[CSRGraph, np.ndarray, List[int]]:
+    """Apply one delta. Returns (new_graph, new_parts, touched) where
+    `touched` is the sorted list of cluster ids whose cached embeddings
+    are now stale — the endpoints' clusters (an edge changes both rows
+    of Â it lands in) plus every new node's assigned cluster. Clusters
+    not listed are untouched by construction: no row of their Â slice
+    changed, so their cached embeddings remain exact."""
+    n_old = graph.num_nodes
+    new_graph = append_graph(graph, num_new_nodes=delta.num_new_nodes,
+                             src=delta.src, dst=delta.dst,
+                             features=delta.features)
+    parts = np.asarray(parts)
+    num_parts = int(parts.max()) + 1 if len(parts) else 1
+    new_parts = np.concatenate(
+        [parts, np.full(delta.num_new_nodes, -1, parts.dtype)])
+    # assign new nodes in id order so new→new edges see earlier picks
+    sizes = np.bincount(parts, minlength=num_parts).astype(np.int64)
+    for v in range(n_old, n_old + delta.num_new_nodes):
+        nbr_parts = new_parts[new_graph.neighbors(v)]
+        nbr_parts = nbr_parts[nbr_parts >= 0]
+        if len(nbr_parts):
+            c = int(np.bincount(nbr_parts, minlength=num_parts).argmax())
+        else:
+            c = int(sizes.argmin())     # isolated node → smallest cluster
+        new_parts[v] = c
+        sizes[c] += 1
+    touched = set(int(new_parts[v])
+                  for v in range(n_old, n_old + delta.num_new_nodes))
+    for u, v in zip(delta.src, delta.dst):
+        if u != v:
+            touched.add(int(new_parts[u]))
+            touched.add(int(new_parts[v]))
+    return new_graph, new_parts, sorted(touched)
+
+
+class BalanceMonitor:
+    """Flags partition-quality decay under live growth. `check(parts)`
+    computes imbalance = max cluster size / mean cluster size; past
+    `threshold` it warns and calls `on_rebalance(imbalance, sizes)`
+    once per exceedance streak (re-arming after the ratio drops back).
+    Warn-only: re-partitioning is the hook's job, not the monitor's."""
+
+    def __init__(self, *, threshold: float = 2.0,
+                 on_rebalance: Optional[Callable] = None):
+        if threshold <= 1.0:
+            raise ValueError(f"threshold must be > 1, got {threshold}")
+        self.threshold = float(threshold)
+        self.on_rebalance = on_rebalance
+        self._armed = True
+
+    def check(self, parts: np.ndarray) -> float:
+        parts = np.asarray(parts)
+        num_parts = int(parts.max()) + 1 if len(parts) else 1
+        sizes = np.bincount(parts, minlength=num_parts)
+        imbalance = float(sizes.max() / max(sizes.mean(), 1e-12))
+        if imbalance > self.threshold:
+            if self._armed:
+                warnings.warn(
+                    f"cluster imbalance {imbalance:.2f} exceeds "
+                    f"threshold {self.threshold:.2f} (sizes "
+                    f"{sizes.tolist()}); serving quality degrades — "
+                    f"schedule a re-partition", RuntimeWarning,
+                    stacklevel=2)
+                if self.on_rebalance is not None:
+                    self.on_rebalance(imbalance, sizes)
+                self._armed = False
+        else:
+            self._armed = True
+        return imbalance

@@ -156,3 +156,59 @@ assert hist[0] == hist[2], hist
 print("DP_PREFETCH_OK")
 """, devices=2)
     assert "DP_PREFETCH_OK" in out
+
+
+def test_prefetch_auto_tunes_and_matches_sync_trajectory():
+    """execution.prefetch="auto": the warmup epoch measures the
+    host-build/device-step ratio, later epochs run at the picked depth,
+    both are logged in history rows — and the final params stay bitwise
+    identical to a fully synchronous run (prefetch is a pure latency
+    optimization, measured or not)."""
+    from repro.core.experiment import build_experiment, preset
+
+    results = {}
+    for pf in (0, "auto"):
+        spec = preset("ppi_tiny")
+        spec.run.epochs = 3
+        spec.execution.prefetch = pf
+        results[pf] = build_experiment(spec).fit()
+    sync, auto = results[0], results["auto"]
+    assert [h["loss"] for h in sync.history] == \
+        [h["loss"] for h in auto.history]
+    same = jax.tree_util.tree_map(
+        lambda a, b_: bool((np.asarray(a) == np.asarray(b_)).all()),
+        sync.params, auto.params)
+    assert all(jax.tree_util.tree_leaves(same))
+    # only the auto run carries the tuning diagnostics
+    assert all("prefetch_depth" not in h for h in sync.history)
+    warm, later = auto.history[0], auto.history[1:]
+    assert warm["prefetch_depth"] == 0          # synchronous warmup
+    ratio = warm["host_build_over_step"]
+    assert np.isfinite(ratio) and ratio >= 0
+    from repro.core.engine import AUTO_PREFETCH_MAX, Engine
+    expect = Engine._auto_prefetch_depth(ratio)
+    for h in later:
+        assert h["prefetch_depth"] == expect
+        assert "host_build_over_step" not in h
+        assert 0 <= h["prefetch_depth"] <= AUTO_PREFETCH_MAX
+
+
+def test_auto_prefetch_depth_formula():
+    from repro.core.engine import AUTO_PREFETCH_MAX, Engine
+    assert Engine._auto_prefetch_depth(0.0) == 0
+    assert Engine._auto_prefetch_depth(0.049) == 0      # not worth a thread
+    assert Engine._auto_prefetch_depth(0.05) == 1
+    assert Engine._auto_prefetch_depth(0.5) == 1
+    assert Engine._auto_prefetch_depth(0.9) == 2
+    assert Engine._auto_prefetch_depth(50.0) == AUTO_PREFETCH_MAX
+
+
+def test_prefetch_auto_spec_validation():
+    from repro.core.experiment import preset, validate
+    spec = preset("ppi_tiny")
+    spec.execution.prefetch = "auto"
+    validate(spec)
+    for bad in ("eager", -1, 1.5):
+        spec.execution.prefetch = bad
+        with pytest.raises(ValueError, match="execution.prefetch"):
+            validate(spec)
