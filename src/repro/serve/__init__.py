@@ -5,7 +5,8 @@ The cluster partition that makes Cluster-GCN training efficient is also
 the serving system's unit of everything: embeddings are precomputed and
 cached per cluster (`embedding_cache`), queries route by cluster and
 pad into pow2 buckets for a jit'd probs/top-k step (`engine`), and live
-graph updates invalidate exactly the clusters they touch (`deltas`).
+graph updates invalidate exactly the clusters inside the delta's
+num_layers-hop influence region (`deltas`).
 See docs/serving.md for the cache-key scheme, invalidation rules and
 latency methodology; `launch/serve_gcn.py` is the CLI front door.
 """

@@ -5,9 +5,14 @@ served graph. Applying one is cheap on purpose: the CSR is rebuilt
 host-side (`graph.csr.append_graph`), new nodes are assigned to the
 majority cluster among their already-assigned neighbors (the greedy
 streaming heuristic — METIS quality is not needed for a handful of
-nodes), and ONLY the clusters actually touched by the delta have their
-cached embeddings invalidated. Everything else keeps serving cached
-bytes unchanged.
+nodes), and ONLY the clusters inside the delta's influence region have
+their cached embeddings invalidated. The region is the num_layers-hop
+neighborhood of the changed nodes: adding edge (u, v) rescales u's and
+v's degrees, so rows/columns u and v of the normalized Â change, and
+after L propagations every node within L hops of u or v can see the
+difference — including nodes in other clusters reached through
+cross-cluster edges. Clusters outside that region keep serving cached
+bytes unchanged, and that is exact, not an approximation.
 
 `BalanceMonitor` watches the side effect of that laziness: greedy
 assignment slowly skews cluster sizes, and Cluster-GCN's whole premise
@@ -25,6 +30,7 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 from repro.graph.csr import CSRGraph, append_graph
+from repro.serve.embedding_cache import _expand_frontier
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,14 +49,24 @@ class GraphDelta:
         return len(self.src)
 
 
-def apply_delta(graph: CSRGraph, parts: np.ndarray, delta: GraphDelta
+def apply_delta(graph: CSRGraph, parts: np.ndarray, delta: GraphDelta,
+                *, num_layers: int
                 ) -> Tuple[CSRGraph, np.ndarray, List[int]]:
     """Apply one delta. Returns (new_graph, new_parts, touched) where
     `touched` is the sorted list of cluster ids whose cached embeddings
-    are now stale — the endpoints' clusters (an edge changes both rows
-    of Â it lands in) plus every new node's assigned cluster. Clusters
-    not listed are untouched by construction: no row of their Â slice
-    changed, so their cached embeddings remain exact."""
+    are now stale: every cluster intersecting the `num_layers`-hop
+    neighborhood (on the NEW graph) of the changed nodes — edge
+    endpoints plus new nodes. An edge changes its endpoints' degrees,
+    hence rows AND columns u, v of the normalized Â; each of the L
+    propagation hops then widens the set of affected hidden states by
+    one neighbor hop, so final logits change only for nodes within L
+    hops of a changed node. Clusters not listed are untouched by
+    construction — no logit of theirs moved — so their cached
+    embeddings remain exact on the updated graph. (Re-announcing an
+    existing edge is a CSR no-op but still invalidates conservatively.)
+    """
+    if num_layers < 1:
+        raise ValueError(f"num_layers must be >= 1, got {num_layers}")
     n_old = graph.num_nodes
     new_graph = append_graph(graph, num_new_nodes=delta.num_new_nodes,
                              src=delta.src, dst=delta.dst,
@@ -70,13 +86,16 @@ def apply_delta(graph: CSRGraph, parts: np.ndarray, delta: GraphDelta
             c = int(sizes.argmin())     # isolated node → smallest cluster
         new_parts[v] = c
         sizes[c] += 1
-    touched = set(int(new_parts[v])
-                  for v in range(n_old, n_old + delta.num_new_nodes))
+    seeds = list(range(n_old, n_old + delta.num_new_nodes))
     for u, v in zip(delta.src, delta.dst):
         if u != v:
-            touched.add(int(new_parts[u]))
-            touched.add(int(new_parts[v]))
-    return new_graph, new_parts, sorted(touched)
+            seeds.extend((int(u), int(v)))
+    region = np.unique(np.asarray(seeds, dtype=np.int64))
+    for _ in range(num_layers):
+        region = _expand_frontier(new_graph.indptr, new_graph.indices,
+                                  region)
+    touched = np.unique(new_parts[region]) if len(region) else []
+    return new_graph, new_parts, [int(c) for c in touched]
 
 
 class BalanceMonitor:

@@ -32,10 +32,12 @@ from __future__ import annotations
 
 import collections
 import json
+import os
 import pathlib
+import shutil
 import tempfile
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional
 
 import jax
 import numpy as np
@@ -235,18 +237,23 @@ class EmbeddingCache:
     out the key scheme and the invalidation rules.
 
     Layout: <root>/step<NNNN>_<fingerprint>/{manifest.json,
-    cluster_<c>.npy}. Writes are atomic (tmp + rename) so a crashed
-    precompute never leaves a torn cluster file; loads are mmap'd so a
-    query pages in only the rows it touches. `recompute_counts` tracks
-    how many times each cluster was (re)stored — the surgical-
-    invalidation test locks "a delta touching cluster c recomputes
-    ONLY cluster c" against it."""
+    cluster_<c>.npy}. Writes are atomic AND durable (tmp + fsync +
+    rename + directory fsync) so neither a crashed nor a power-lost
+    precompute leaves a torn cluster file behind a valid-looking name;
+    loads are mmap'd so a query pages in only the rows it touches.
+    `recompute_counts` tracks how many times each cluster was
+    (re)stored — the surgical-invalidation test locks "a delta
+    recomputes ONLY the clusters in its influence region" against it.
+    Live updates never mutate a keyed directory in place: `rekey`
+    switches to the grown graph's fingerprint, carrying untouched
+    cluster files over by hardlink."""
 
     def __init__(self, root, *, checkpoint_step: int,
                  partition_fingerprint: str):
+        self.root = pathlib.Path(root)
         self.checkpoint_step = int(checkpoint_step)
         self.partition_fingerprint = str(partition_fingerprint)
-        self.dir = (pathlib.Path(root)
+        self.dir = (self.root
                     / f"step{self.checkpoint_step:010d}"
                       f"_{self.partition_fingerprint}")
         self.dir.mkdir(parents=True, exist_ok=True)
@@ -273,10 +280,51 @@ class EmbeddingCache:
         try:
             with open(fd, "wb") as f:
                 np.save(f, emb)
+                f.flush()
+                # fsync before the rename: rename-then-crash must never
+                # publish a name whose data blocks are still in flight
+                os.fsync(f.fileno())
             pathlib.Path(tmp).replace(self.path(cluster))
+            self._fsync_dir()
         finally:
             pathlib.Path(tmp).unlink(missing_ok=True)
         self.recompute_counts[int(cluster)] += 1
+
+    def _fsync_dir(self) -> None:
+        dfd = os.open(self.dir, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+
+    def rekey(self, partition_fingerprint: str, *,
+              drop: Iterable[int] = ()) -> "EmbeddingCache":
+        """Switch to the directory keyed on a new partition fingerprint
+        — the served graph changed under a GraphDelta, so the old key
+        no longer describes what the engine serves. Every cached
+        cluster except `drop` (the delta's stale set) is carried over
+        by hardlink (copy when the filesystem refuses links), and the
+        old directory is left byte-for-byte intact: engines still
+        serving the base (checkpoint, partition) keep sharing an
+        uncontaminated warm cache, and post-delta re-embeds land only
+        under the grown graph's own key. `recompute_counts` carries
+        across so invalidation tests see one history."""
+        if partition_fingerprint == self.partition_fingerprint:
+            return self
+        new = EmbeddingCache(
+            self.root, checkpoint_step=self.checkpoint_step,
+            partition_fingerprint=partition_fingerprint)
+        new.recompute_counts = self.recompute_counts
+        dropped = {int(c) for c in drop}
+        for c in self.cached_clusters():
+            if c in dropped or new.has(c):
+                continue
+            try:
+                os.link(self.path(c), new.path(c))
+            except OSError:
+                shutil.copy2(self.path(c), new.path(c))
+        new._fsync_dir()
+        return new
 
     def invalidate(self, cluster: int) -> bool:
         """Drop one cluster's cached embeddings (a GraphDelta touched

@@ -11,7 +11,9 @@ The bucket ladder reuses the k_slots idea from training: a short
 geometric ladder bounds recompilation while wasting at most ~2x padding.
 
 Live updates enter through `apply_delta`: the graph/routing table are
-swapped, ONLY the touched clusters' cache entries are invalidated, and
+swapped, the cache re-keys onto the grown graph's partition
+fingerprint carrying over every cluster OUTSIDE the delta's
+num_layers-hop influence region (those inside re-embed lazily), and
 the balance monitor checks whether greedy growth has skewed the
 partition past the re-partition threshold (warn-only).
 """
@@ -29,6 +31,7 @@ import numpy as np
 from repro.core.gcn import GCNConfig
 from repro.core.kslots import pow2_ceil
 from repro.graph.csr import CSRGraph
+from repro.graph.partition import partition_fingerprint
 from repro.serve.deltas import BalanceMonitor, GraphDelta, apply_delta
 from repro.serve.embedding_cache import (EmbeddingCache, embed_cluster,
                                          full_graph_embeddings)
@@ -208,19 +211,30 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def apply_delta(self, delta: GraphDelta) -> Dict:
         """Apply a live update: swap in the appended graph + routing
-        table, invalidate ONLY the touched clusters' cache entries
-        (untouched clusters keep serving their exact cached bytes),
-        and run the balance check. The cache directory stays keyed on
-        the checkpoint/partition fingerprint the engine was built with
-        — deltas are an in-session overlay on that base; a restarted
-        engine re-fingerprints and precomputes fresh (docs/serving.md
-        covers the staleness rules)."""
-        graph2, parts2, touched = apply_delta(self.graph, self.parts,
-                                              delta)
+        table, invalidate the clusters inside the delta's
+        num_layers-hop influence region (every cluster outside it keeps
+        serving its exact cached bytes — their logits provably did not
+        move), and run the balance check. The cache re-keys onto the
+        grown graph's partition fingerprint, hardlinking the untouched
+        cluster files across, so the base (checkpoint, partition)
+        directory is never contaminated with delta state: a second
+        engine on the base graph still shares a clean warm cache, and a
+        restarted engine re-derives whichever key matches its graph
+        (docs/serving.md covers the staleness rules)."""
+        graph2, parts2, touched = apply_delta(
+            self.graph, self.parts, delta,
+            num_layers=self.cfg.num_layers)
+        new_fp = partition_fingerprint(graph2, parts2)
+        if new_fp == self.cache.partition_fingerprint:
+            # every edge was already present: the served graph did not
+            # change, so nothing is stale and the key stays
+            touched, invalidated = [], []
+        else:
+            invalidated = [c for c in touched if self.cache.has(c)]
+            self.cache = self.cache.rekey(new_fp, drop=touched)
         self.graph, self.parts = graph2, parts2
         self.num_parts = int(self.parts.max()) + 1
         self._cluster_rows.clear()
-        invalidated = [c for c in touched if self.cache.invalidate(c)]
         imbalance = self.monitor.check(self.parts)
         return {"touched_clusters": touched,
                 "invalidated_clusters": invalidated,
@@ -247,7 +261,6 @@ class ServeEngine:
                                            build_partition, validate)
         from repro.core.gcn import init_gcn
         from repro.graph.datasets import default_serving_cache_dir
-        from repro.graph.partition import partition_fingerprint
         from repro.runtime.checkpoint import CheckpointManager
 
         validate(spec)

@@ -9,13 +9,13 @@ import pytest
 
 from repro.core.experiment import (ExperimentSpec, build_experiment,
                                    preset, validate)
-from repro.core.gcn import init_gcn
+from repro.core.gcn import GCNConfig, init_gcn
 from repro.core.trainer import full_graph_logits
 from repro.graph.csr import CSRGraph, append_graph
 from repro.graph.partition import partition_fingerprint
 from repro.runtime.checkpoint import CheckpointManager
 from repro.serve import (BalanceMonitor, EmbeddingCache, GraphDelta,
-                         ServeEngine, embed_cluster,
+                         ServeEngine, apply_delta, embed_cluster,
                          full_graph_embeddings)
 
 PARITY_TOL = 1e-5
@@ -91,40 +91,109 @@ def test_halo_reembed_equals_blocked_full_pass(trained):
 # ----------------------------------------------------------------------
 # live updates: surgical invalidation
 # ----------------------------------------------------------------------
-def test_delta_invalidation_is_surgical(engine):
-    """After a GraphDelta touching cluster c, ONLY the touched clusters
-    recompute (recompute counters), and untouched-cluster query results
-    are bitwise identical pre/post delta."""
+def test_delta_influence_region_touched_clusters():
+    """`apply_delta` invalidates exactly the clusters intersecting the
+    num_layers-hop neighborhood of the changed nodes: on a path graph a
+    far cluster is provably unreachable within L hops and stays out of
+    the touched set, while near clusters are in it."""
+    n = 12                                   # path 0-1-...-11
+    g = CSRGraph.from_edges(n, range(n - 1), range(1, n),
+                            features=np.eye(n, dtype=np.float32))
+    parts = np.repeat(np.arange(3), 4)       # [0..3] [4..7] [8..11]
+    delta = GraphDelta(src=(0,), dst=(2,))   # changes Â rows/cols 0, 2
+    _, _, touched = apply_delta(g, parts, delta, num_layers=3)
+    assert touched == [0, 1]                 # 3-hop region = {0..5}
+    _, _, touched = apply_delta(g, parts, delta, num_layers=1)
+    assert touched == [0]                    # 1-hop region = {0..3}
+    with pytest.raises(ValueError, match="num_layers"):
+        apply_delta(g, parts, delta, num_layers=0)
+
+
+def test_delta_invalidation_is_surgical(tmp_path):
+    """On a graph where the delta's influence region provably stays
+    inside cluster 0, ONLY cluster 0 recomputes (counter-locked), every
+    other cluster answers bitwise-identically to pre-delta, and EVERY
+    cluster — touched or not — matches the dense forward on the GROWN
+    graph. Also pins the re-key: the base cache directory keeps all its
+    cluster files, so engines on the un-grown graph stay clean."""
+    rng = np.random.default_rng(0)
+    n = 24                                   # path graph, 4 clusters of 6
+    g = CSRGraph.from_edges(
+        n, range(n - 1), range(1, n),
+        features=rng.normal(size=(n, 5)).astype(np.float32))
+    parts = np.repeat(np.arange(4), 6)
+    cfg = GCNConfig(in_dim=5, hidden_dim=8, out_dim=3, num_layers=2)
+    params = init_gcn(jax.random.PRNGKey(0), cfg)
+    cache = EmbeddingCache(
+        tmp_path, checkpoint_step=0,
+        partition_fingerprint=partition_fingerprint(g, parts))
+    eng = ServeEngine(params, g, parts, cfg, cache=cache, max_batch=32)
+    eng.warm()
+    base_dir = eng.cache.dir
+    pre = eng.query(np.arange(n))
+    before = dict(eng.cache.recompute_counts)
+
+    # edge 0-2: 2-hop region = {0..4}, strictly inside cluster {0..5}
+    info = eng.apply_delta(GraphDelta(src=(0,), dst=(2,)))
+    assert info["touched_clusters"] == [0]
+    assert info["invalidated_clusters"] == [0]
+    # cache re-keyed onto the grown fingerprint; base dir untouched
+    assert eng.cache.dir != base_dir
+    assert sorted(int(p.stem.split("_")[1])
+                  for p in base_dir.glob("cluster_*.npy")) == [0, 1, 2, 3]
+
+    post = eng.query(np.arange(n))
+    ref = _dense_ref(eng)                    # dense forward, grown graph
+    assert np.abs(post.logits - ref).max() <= PARITY_TOL
+    rest = np.arange(6, n)                   # clusters 1-3: untouched
+    assert np.array_equal(pre.logits[rest], post.logits[rest])
+    assert np.array_equal(pre.probs[rest], post.probs[rest])
+    after = dict(eng.cache.recompute_counts)
+    for c in range(4):
+        expected = before.get(c, 0) + (1 if c == 0 else 0)
+        assert after.get(c, 0) == expected, (c, before, after)
+
+
+def test_delta_invalidation_exact_on_ppi(engine):
+    """The same contract on ppi_tiny, whose partition has real cut
+    edges: after a delta, every cluster — inside or outside the touched
+    set — serves logits matching the dense forward on the grown graph,
+    and untouched clusters answer bitwise-identically without
+    recomputing."""
     engine.warm()
     g, parts = engine.graph, engine.parts
-    # an edge inside one cluster, between two low-degree nodes
     c_target = int(parts[0])
     in_c = np.where(parts == c_target)[0]
-    u, v = int(in_c[0]), int(in_c[-1])
-    untouched = np.where(parts != c_target)[0]
-    before = {int(c): engine.cache.recompute_counts[int(c)]
-              for c in range(engine.num_parts)}
-    pre = engine.query(untouched[:engine.buckets[-1]])
+    # a genuinely NEW edge: re-announcing an existing one is a no-op
+    u = int(in_c[0])
+    nbrs = set(int(w) for w in g.neighbors(u))
+    v = next(int(w) for w in in_c[::-1]
+             if int(w) != u and int(w) not in nbrs)
+    before = dict(engine.cache.recompute_counts)
+    pre = engine.query(np.arange(g.num_nodes))
 
     info = engine.apply_delta(GraphDelta(src=(u,), dst=(v,)))
-    assert info["touched_clusters"] == [c_target]
-    assert info["invalidated_clusters"] == [c_target]
+    touched = info["touched_clusters"]
+    assert c_target in touched
+    assert info["invalidated_clusters"] == touched   # cache was warm
 
-    # untouched clusters: zero recomputes, bitwise-identical answers
-    post = engine.query(untouched[:engine.buckets[-1]])
-    assert np.array_equal(pre.logits, post.logits)
-    assert np.array_equal(pre.probs, post.probs)
-    assert np.array_equal(pre.topk_ids, post.topk_ids)
-    # touching the stale cluster lazily re-embeds it — once
-    engine.query(in_c[:4])
+    post = engine.query(np.arange(engine.graph.num_nodes))
+    ref = _dense_ref(engine)
+    # the serving-parity contract survives the delta for EVERY node,
+    # cross-cluster edges included — not just the touched cluster
+    assert np.abs(post.logits - ref).max() <= PARITY_TOL
+    untouched_nodes = np.where(~np.isin(parts, touched))[0]
+    if len(untouched_nodes):
+        assert np.array_equal(pre.logits[untouched_nodes],
+                              post.logits[untouched_nodes])
     after = dict(engine.cache.recompute_counts)
     for c in range(engine.num_parts):
-        expected = before[c] + (1 if c == c_target else 0)
+        expected = before.get(c, 0) + (1 if c in touched else 0)
         assert after.get(c, 0) == expected, (c, before, after)
-    # and the re-embedded cluster is exact on the GROWN graph
-    ref = _dense_ref(engine)
-    r = engine.query(in_c[:engine.buckets[-1]])
-    assert np.abs(r.logits - ref[r.node_ids]).max() <= PARITY_TOL
+    # re-announcing the same edge: graph unchanged → nothing stale
+    again = engine.apply_delta(GraphDelta(src=(u,), dst=(v,)))
+    assert again["touched_clusters"] == []
+    assert again["invalidated_clusters"] == []
 
 
 def test_delta_new_node_joins_neighbor_cluster(engine):
@@ -216,6 +285,24 @@ def test_embedding_cache_store_load_invalidate(tmp_path):
     assert cache.invalidate(1) is False          # idempotent
     # no stray tmp files from the atomic write
     assert not list(cache.dir.glob("*.tmp"))
+
+
+def test_embedding_cache_rekey_carries_untouched(tmp_path):
+    cache = EmbeddingCache(tmp_path, checkpoint_step=7,
+                           partition_fingerprint="base")
+    a = np.zeros((2, 3), np.float32)
+    b = np.ones((2, 3), np.float32)
+    cache.store(0, a)
+    cache.store(1, b)
+    new = cache.rekey("grown", drop=[1])
+    assert new.dir != cache.dir
+    assert new.has(0) and not new.has(1)
+    np.testing.assert_array_equal(np.asarray(new.load(0)), a)
+    # base directory untouched: both clusters still served from it
+    assert cache.cached_clusters() == [0, 1]
+    # counter history carries across; same fingerprint is a no-op
+    assert new.recompute_counts is cache.recompute_counts
+    assert new.rekey("grown") is new
 
 
 def test_cache_key_changes_with_partition(trained):
