@@ -96,6 +96,60 @@ def analyze(rec) -> dict:
                 roofline_fraction=frac, collective_gb=coll_bytes / 1e9)
 
 
+def spmm_fused_section(shapes=None):
+    """Self-contained arithmetic-intensity model for the block-ELL
+    Â·(XW) product (no dryrun artifacts needed — run with --spmm).
+
+    Unfused pays an HBM round-trip for XW (write n·F, then the spmm
+    re-reads B·F per occupied tile); fused recomputes the (B, D)·(D, F)
+    slice per slot with W resident in VMEM, so XW never touches HBM.
+    The trade is extra MXU FLOPs (recompute factor ≈ mean row_k) for
+    ~2× less HBM traffic on the hot operand — worth it exactly when the
+    unfused product is memory-bound, which this table makes visible.
+    All tensors modeled at 4 B/elem (fp32; bf16 halves both sides)."""
+    if shapes is None:
+        # (name, nodes, D, F, K, mean row_k): cluster-batch regimes from
+        # bench_spmm — reddit-like q=2 batch and a sparser ppi batch
+        shapes = [("reddit-q2", 4096, 128, 128, 8, 5.0),
+                  ("reddit-q2-F512", 4096, 512, 512, 8, 5.0),
+                  ("ppi-tiny", 512, 64, 64, 4, 1.6)]
+    B, BY = 128, 4
+    lines = ["| shape | variant | GFLOPs | HBM MB | AI (F/B) | "
+             "Tmem(ms) | Tcomp(ms) | bound |",
+             "|" + "---|" * 8]
+    for name, n, D, F, K, rk in shapes:
+        nrb = -(-n // B)
+        tiles = nrb * rk                      # live (row-block, slot) pairs
+        for variant in ("unfused", "fused"):
+            if variant == "unfused":
+                flops = 2 * n * D * F + 2 * tiles * B * B * F
+                bytes_ = BY * (n * D + D * F     # XW reads
+                               + n * F           # XW write to HBM
+                               + tiles * B * B   # adjacency tiles
+                               + tiles * B * F   # spmm re-reads XW
+                               + n * F)          # Y write
+            else:
+                flops = 2 * tiles * B * D * F + 2 * tiles * B * B * F
+                bytes_ = BY * (tiles * B * D     # X col-block per slot
+                               + D * F           # W, VMEM-resident
+                               + tiles * B * B   # adjacency tiles
+                               + n * F)          # Y write
+            ai = flops / bytes_
+            t_mem = bytes_ / HBM_BW
+            t_comp = flops / PEAK_FLOPS_BF16
+            bound = "memory" if t_mem > t_comp else "compute"
+            lines.append(
+                f"| {name} | {variant} | {flops / 1e9:.2f} "
+                f"| {bytes_ / 1e6:.1f} | {ai:.0f} | {t_mem * 1e3:.3f} "
+                f"| {t_comp * 1e3:.3f} | {bound} |")
+    table = "\n".join(lines)
+    out = RESULTS / "roofline_spmm_fused.md"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(table + "\n")
+    print(table)
+    return lines
+
+
 RECO = {
     ("compute",): "increase arithmetic efficiency: fuse attention (Pallas"
                   " flash kernel on TPU), reduce remat recompute",
@@ -110,7 +164,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--spmm", action="store_true",
+                    help="print the self-contained fused-vs-unfused "
+                         "block-ELL Â·(XW) arithmetic-intensity table "
+                         "(needs no dryrun artifacts) and exit")
     args = ap.parse_args(argv)
+
+    if args.spmm:
+        return spmm_fused_section()
 
     rows = [analyze(r) for r in load(args.tag, args.mesh)]
     hdr = (f"| arch | shape | status | Tcomp(s) | Tmem(s) | Tcoll(s) | "

@@ -52,6 +52,7 @@ from repro.core.precision import (all_finite, init_scale_state,
                                   update_scale_state)
 from repro.core.prefetch import prefetch_iter
 from repro.kernels.ops import spmm as spmm_dispatch
+from repro.kernels.ops import spmm_xw as spmm_xw_dispatch
 from repro.nn.optim import Optimizer, apply_updates
 from repro.runtime import faults
 from repro.runtime.resilience import StragglerDetector
@@ -78,7 +79,8 @@ class TrainResult:
 
 
 def make_train_step(cfg: GCNConfig, opt: Optimizer,
-                    spmm: Callable = spmm_dispatch):
+                    spmm: Callable = spmm_dispatch,
+                    spmm_xw: Callable = spmm_xw_dispatch):
     """Single-device jit'd step. With cfg.loss_scaling == "none" (the
     default) the returned step takes (params, opt_state, rng, batch) and
     its jaxpr is EXACTLY the pre-precision-policy step — bitwise-locked
@@ -92,7 +94,8 @@ def make_train_step(cfg: GCNConfig, opt: Optimizer,
         def step(params, opt_state, rng, batch_tuple):
             rng, sub = jax.random.split(rng)
             (loss, aux), grads = jax.value_and_grad(gcn_loss, has_aux=True)(
-                params, batch_tuple, cfg, train=True, rng=sub, spmm=spmm)
+                params, batch_tuple, cfg, train=True, rng=sub,
+                spmm=spmm, spmm_xw=spmm_xw)
             updates, opt_state = opt.update(grads, opt_state, params)
             params = apply_updates(params, updates)
             return params, opt_state, rng, loss, aux
@@ -100,7 +103,7 @@ def make_train_step(cfg: GCNConfig, opt: Optimizer,
 
     def scaled_loss(params, batch_tuple, sub, scale):
         loss, aux = gcn_loss(params, batch_tuple, cfg, train=True,
-                             rng=sub, spmm=spmm)
+                             rng=sub, spmm=spmm, spmm_xw=spmm_xw)
         return scale_loss(loss, scale), (loss, aux)
 
     def step(params, opt_state, rng, scale_state, batch_tuple):
@@ -210,10 +213,11 @@ class SingleDeviceBackend:
     group_size = 1
 
     def __init__(self, cfg: GCNConfig, opt: Optimizer,
-                 spmm: Callable = spmm_dispatch):
+                 spmm: Callable = spmm_dispatch,
+                 spmm_xw: Callable = spmm_xw_dispatch):
         self.opt = opt
         self._policy = policy_from_config(cfg)
-        self._step = make_train_step(cfg, opt, spmm)
+        self._step = make_train_step(cfg, opt, spmm, spmm_xw)
 
     def init(self, params, rng):
         state = {"params": params, "opt": self.opt.init(params), "rng": rng}
@@ -249,7 +253,8 @@ class ShardMapBackend:
     def __init__(self, cfg: GCNConfig, opt: Optimizer, mesh, *,
                  dp_axis: str = "data", compression=None,
                  microbatches: int = 1, compression_group_size=None,
-                 spmm: Callable = spmm_dispatch):
+                 spmm: Callable = spmm_dispatch,
+                 spmm_xw: Callable = spmm_xw_dispatch):
         from repro.dist.steps import (init_gcn_train_state,
                                       make_gcn_train_step)
         self.opt = opt
@@ -265,7 +270,8 @@ class ShardMapBackend:
         self._step = make_gcn_train_step(
             cfg, opt, mesh, axis_name=dp_axis, compression=compression,
             microbatches=self.microbatches,
-            compression_group_size=compression_group_size, spmm=spmm)
+            compression_group_size=compression_group_size, spmm=spmm,
+            spmm_xw=spmm_xw)
 
     def init(self, params, rng):
         return {"dist": self._init_state(params, self.opt, self.dsize,

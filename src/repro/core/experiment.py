@@ -218,6 +218,11 @@ class ModelSpec:
                      "the backward recomputes activations — the "
                      "memory knob for deep GCNs")
     remat_chunk: int = _f(2, "layers per remat chunk (remat=true only)")
+    fuse_spmm: bool = _f(False, "route each layer's A'(XW+b) through "
+                         "the fused one-pass kernel seam (ops.spmm_xw: "
+                         "W resident in VMEM, row_k-specialized K loop) "
+                         "instead of matmul-then-spmm; same math on "
+                         "every backend, no XW HBM round-trip")
     multilabel: Optional[bool] = _f(None, "sigmoid BCE (True) vs "
                                     "softmax CE (False); None infers "
                                     "from the label array's rank")
@@ -627,7 +632,8 @@ def build_gcn_config(spec: ExperimentSpec, graph: CSRGraph) -> GCNConfig:
         multilabel=multilabel, layernorm=m.layernorm,
         precompute_ax=m.precompute_ax, precision=m.precision,
         loss_scaling=m.loss_scaling, loss_scale=m.loss_scale,
-        remat=m.remat, remat_chunk=m.remat_chunk)
+        remat=m.remat, remat_chunk=m.remat_chunk,
+        fuse_spmm=m.fuse_spmm)
 
 
 def build_optimizer(spec: ExperimentSpec) -> Optimizer:

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.precision import policy_from_config
 from repro.kernels.ops import spmm as spmm_dispatch
+from repro.kernels.ops import spmm_xw as spmm_xw_dispatch
 from repro.nn.core import glorot, zeros_init
 
 PyTree = Any
@@ -44,6 +45,10 @@ class GCNConfig:
     loss_scale: float = 2.0 ** 15  # initial (static: constant) scale
     remat: bool = False           # jax.checkpoint over layer chunks
     remat_chunk: int = 2          # layers per remat chunk
+    fuse_spmm: bool = False       # route each layer's Â·(XW+b) through
+                                  # the fused one-pass kernel seam
+                                  # (ops.spmm_xw) instead of matmul-then-
+                                  # spmm; same math, no XW HBM round-trip
 
     @property
     def dims(self):
@@ -72,7 +77,8 @@ def _layernorm(x, scale):
 def gcn_forward(params: PyTree, adj, x: jnp.ndarray,
                 cfg: GCNConfig, *, train: bool = False,
                 rng: Optional[jax.Array] = None,
-                spmm: Callable = spmm_dispatch) -> jnp.ndarray:
+                spmm: Callable = spmm_dispatch,
+                spmm_xw: Callable = spmm_xw_dispatch) -> jnp.ndarray:
     """Returns final-layer logits Z^{(L)}, always fp32 (no activation on
     the last layer).
 
@@ -109,11 +115,19 @@ def gcn_forward(params: PyTree, adj, x: jnp.ndarray,
         if need_dropout:
             keep = 1.0 - cfg.dropout
             h = h * jax.random.bernoulli(key, keep, h.shape) / keep
-        z = (jnp.matmul(h.astype(cd), layer["w"].astype(cd),   # X W
-                        preferred_element_type=jnp.float32)
-             + layer["b"]).astype(cd)
-        if not (i == 0 and cfg.precompute_ax):   # Â (XW): (b, b)·(b, F')
-            z = spmm(adj, z)
+        propagate = not (i == 0 and cfg.precompute_ax)
+        if cfg.fuse_spmm and propagate:
+            # fused Â·(XW + b): one seam, no XW materialization between
+            # the two products. Same math contract as the unfused branch
+            # (operands in cd, fp32 accumulation, fp32 bias add) — in
+            # fp32 the two branches are value-identical.
+            z = spmm_xw(adj, h.astype(cd), layer["w"], layer["b"])
+        else:
+            z = (jnp.matmul(h.astype(cd), layer["w"].astype(cd),   # X W
+                            preferred_element_type=jnp.float32)
+                 + layer["b"]).astype(cd)
+            if propagate:                # Â (XW): (b, b)·(b, F')
+                z = spmm(adj, z)
         if i < n - 1:
             if cfg.residual and z.shape == h.shape:
                 z = z + h.astype(z.dtype)        # paper Eq. 8
@@ -142,7 +156,8 @@ def gcn_forward(params: PyTree, adj, x: jnp.ndarray,
 
 
 def gcn_loss(params: PyTree, batch_tuple, cfg: GCNConfig, *,
-             train: bool = True, rng=None, spmm: Callable = spmm_dispatch):
+             train: bool = True, rng=None, spmm: Callable = spmm_dispatch,
+             spmm_xw: Callable = spmm_xw_dispatch):
     """(loss, aux) on a ClusterBatch.astuple(). aux carries micro-F1 parts.
 
     With cfg.precompute_ax the A'X product is NOT recomputed here — the
@@ -154,7 +169,7 @@ def gcn_loss(params: PyTree, batch_tuple, cfg: GCNConfig, *,
     """
     adj, feats, labels, node_mask, loss_mask, num_real = batch_tuple
     logits = gcn_forward(params, adj, feats, cfg, train=train, rng=rng,
-                         spmm=spmm)
+                         spmm=spmm, spmm_xw=spmm_xw)
     denom = jnp.maximum(loss_mask.sum(), 1.0)
     if cfg.multilabel:
         y = labels.astype(jnp.float32)

@@ -32,6 +32,7 @@ from repro.core.precision import (all_finite, init_scale_state,
                                   select_tree, unscale_grads,
                                   update_scale_state)
 from repro.kernels.ops import spmm as spmm_dispatch
+from repro.kernels.ops import spmm_xw as spmm_xw_dispatch
 from repro.dist.compression import (DEFAULT_GROUP_SIZE, bf16_psum_mean,
                                     compressed_psum_mean, psum_mean)
 from repro.dist.sharding import CellPolicy
@@ -196,7 +197,8 @@ def init_gcn_train_state(params: PyTree, opt: Optimizer, nshards: int,
 def make_gcn_train_step(cfg: GCNConfig, opt: Optimizer, mesh, *,
                         axis_name: str = "data", compression=None,
                         microbatches: int = 1, compression_group_size=None,
-                        spmm: Callable = spmm_dispatch) -> Callable:
+                        spmm: Callable = spmm_dispatch,
+                        spmm_xw: Callable = spmm_xw_dispatch) -> Callable:
     """Data-parallel Cluster-GCN step over stacked cluster batches.
 
     The returned jit'd function maps
@@ -258,7 +260,8 @@ def make_gcn_train_step(cfg: GCNConfig, opt: Optimizer, mesh, *,
         def chunk_loss(p, chunk, keys):
             losses, auxes = jax.vmap(
                 lambda bt, k: gcn_loss(p, bt, cfg, train=True, rng=k,
-                                       spmm=spmm))(chunk, keys)
+                                       spmm=spmm,
+                                       spmm_xw=spmm_xw))(chunk, keys)
             loss = losses.mean()
             out = scale_loss(loss, scale) if pol.scaled else loss
             return out, (loss, auxes)

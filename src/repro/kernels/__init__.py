@@ -1,5 +1,6 @@
-from repro.kernels.ops import (spmm, spmm_dense,
+from repro.kernels.ops import (spmm, spmm_dense, spmm_xw,
                                multi_head_attention,
+                               TileBufferPool,
                                block_ell_from_dense, block_ell_from_csr,
                                block_ell_from_csr_ref,
                                block_ell_transpose,
@@ -7,6 +8,8 @@ from repro.kernels.ops import (spmm, spmm_dense,
                                block_ell_needed_k,
                                block_ell_adj_from_dense,
                                block_ell_adj_from_csr)
-from repro.kernels.block_spmm import BlockEllAdj, spmm_block_ell, spmm_ell
+from repro.kernels.block_spmm import (BlockEllAdj, spmm_block_ell,
+                                      spmm_ell, spmm_fused,
+                                      spmm_fused_block_ell)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels import ref

@@ -47,7 +47,8 @@ DEFAULT_BLOCK = 128
 
 @functools.partial(jax.tree_util.register_dataclass,
                    data_fields=("blocks", "block_cols",
-                                "blocks_t", "block_cols_t"),
+                                "blocks_t", "block_cols_t",
+                                "row_k", "row_k_t"),
                    meta_fields=())
 @dataclasses.dataclass(frozen=True)
 class BlockEllAdj:
@@ -57,12 +58,21 @@ class BlockEllAdj:
     block_cols:   (nrb, K)  int32   forward slot → column-block index
     blocks_t:     (ncb, Kt, B, B)   value tiles of Âᵀ (backward pass)
     block_cols_t: (ncb, Kt) int32
+    row_k:        (nrb,) int32 | None   true (occupied) slot count per
+                                  row-block — the per-row-block K
+                                  specialization map the Pallas kernels
+                                  early-out on; None means "assume every
+                                  slot is live" (row_k = K), so payloads
+                                  built before this field existed keep
+                                  working unchanged
+    row_k_t:      (ncb,) int32 | None   same for the transposed tiles
 
     Format invariants (what builders guarantee and the kernel assumes):
       * within a row-block, occupied slots come first, ordered by
         ascending column-block index; unused trailing slots hold an
         all-zero tile with column id 0 (so padding contributes exactly
-        zero to the product — no masking needed in the kernel);
+        zero to the product — no masking needed in the kernel, and
+        skipping slots past `row_k` is EXACT, not an approximation);
       * K and Kt are SHAPE dims: two BlockEllAdj of the same (nrb, K,
         B, Kt) stack/vmap together and share one jit cache entry —
         the fill-adaptive k_slots buckets (repro.core.kslots) lean on
@@ -72,18 +82,22 @@ class BlockEllAdj:
         non-zero tile is a ValueError, never a silent truncation;
       * `blocks_t`/`block_cols_t` hold exactly Âᵀ in the same format
         (all-zero padding tiles are skipped during transposition so
-        padding never inflates Kt).
+        padding never inflates Kt);
+      * `row_k`/`row_k_t`, when present, satisfy 0 <= row_k[i] <= K and
+        every slot at index >= row_k[i] holds an all-zero tile.
 
     Built host-side by ops.block_ell_adj_from_dense / _from_csr
-    (numpy leaves — no device round-trip until the step runs). All four
-    leaves are data (no static fields), so ClusterBatch stacking, vmap
-    over per-shard batches and shard_map partitioning treat it like any
-    other batch array.
+    (numpy leaves — no device round-trip until the step runs). All
+    leaves are data (no static fields; a None row_k is an empty pytree
+    node), so ClusterBatch stacking, vmap over per-shard batches and
+    shard_map partitioning treat it like any other batch array.
     """
     blocks: jnp.ndarray
     block_cols: jnp.ndarray
     blocks_t: jnp.ndarray
     block_cols_t: jnp.ndarray
+    row_k: jnp.ndarray | None = None
+    row_k_t: jnp.ndarray | None = None
 
 
 def _spmm_kernel(block_cols_ref,          # scalar-prefetch (nrb, K)
@@ -115,11 +129,59 @@ def _spmm_kernel(block_cols_ref,          # scalar-prefetch (nrb, K)
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _spmm_kernel_rowk(block_cols_ref,     # scalar-prefetch (nrb, K)
+                      row_k_ref,          # scalar-prefetch (nrb,)
+                      blocks_ref,         # (1, 1, B, B) VMEM
+                      x_ref,              # (B, Fb) VMEM
+                      o_ref,              # (B, Fb) VMEM
+                      acc_ref):           # (B, Fb) fp32 VMEM scratch
+    """Row_k-specialized variant of `_spmm_kernel`: slots past the
+    host-computed true occupancy `row_k[i]` hold all-zero tiles by
+    format invariant, so gating the multiply on `k < row_k[i]` is EXACT
+    — the skipped MXU work contributed nothing. The index maps clamp to
+    the last live slot so the revisited block index also skips its DMA.
+    """
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < row_k_ref[i])
+    def _accumulate():
+        x = x_ref[...]
+        if x.dtype == jnp.float32:
+            a = blocks_ref[0, 0].astype(jnp.float32)
+        else:
+            a = blocks_ref[0, 0].astype(x.dtype)
+        acc_ref[...] += jax.lax.dot_general(
+            a, x, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _clamp_slot(k, rk_i):
+    """Last-live-slot clamp for index maps: once k runs past row_k[i]
+    the fetched block index stops changing, so the pipeline skips the
+    (useless) DMA for every dead trailing slot."""
+    return jnp.minimum(k, jnp.maximum(rk_i - 1, 0))
+
+
 @functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
 def spmm_block_ell(blocks: jnp.ndarray, block_cols: jnp.ndarray,
-                   x: jnp.ndarray, *, block_f: int = 128,
+                   x: jnp.ndarray, *, row_k: jnp.ndarray | None = None,
+                   block_f: int = 128,
                    interpret: bool = False) -> jnp.ndarray:
-    """y = A @ x with A in block-ELL form. Returns (nrb*B, F)."""
+    """y = A @ x with A in block-ELL form. Returns (nrb*B, F).
+
+    `row_k` (optional, (nrb,) int32) is the per-row-block live-slot
+    count: the K loop skips compute AND tile DMA for slots past it.
+    Values are identical either way (dead slots hold zero tiles)."""
     nrb, K, B, B2 = blocks.shape
     assert B == B2, "square blocks"
     n_cols, F = x.shape
@@ -134,37 +196,180 @@ def spmm_block_ell(blocks: jnp.ndarray, block_cols: jnp.ndarray,
         x = jnp.pad(x, ((0, 0), (0, Fp - F)))
     nf = Fp // block_f
 
+    if row_k is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nrb, nf, K),
+            in_specs=[
+                pl.BlockSpec((1, 1, B, B),
+                             lambda i, j, k, bc: (i, k, 0, 0)),
+                pl.BlockSpec((B, block_f),
+                             lambda i, j, k, bc: (bc[i, k], j)),
+            ],
+            out_specs=pl.BlockSpec((B, block_f),
+                                   lambda i, j, k, bc: (i, j)),
+            scratch_shapes=[pltpu.VMEM((B, block_f), jnp.float32)],
+        )
+        fn = pl.pallas_call(
+            _spmm_kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((nrb * B, Fp), x.dtype),
+            interpret=interpret,
+            name="block_ell_spmm",
+        )
+        out = fn(block_cols.astype(jnp.int32), blocks, x)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nrb, nf, K),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, B, B),
+                    lambda i, j, k, bc, rk: (i, _clamp_slot(k, rk[i]),
+                                             0, 0)),
+                pl.BlockSpec(
+                    (B, block_f),
+                    lambda i, j, k, bc, rk: (bc[i, _clamp_slot(k, rk[i])],
+                                             j)),
+            ],
+            out_specs=pl.BlockSpec((B, block_f),
+                                   lambda i, j, k, bc, rk: (i, j)),
+            scratch_shapes=[pltpu.VMEM((B, block_f), jnp.float32)],
+        )
+        fn = pl.pallas_call(
+            _spmm_kernel_rowk,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((nrb * B, Fp), x.dtype),
+            interpret=interpret,
+            name="block_ell_spmm_rowk",
+        )
+        out = fn(block_cols.astype(jnp.int32), row_k.astype(jnp.int32),
+                 blocks, x)
+    return out[:, :F] if Fp != F else out
+
+
+# ----------------------------------------------------------------------
+# fused Â·(XW) product — the paper's eq. 8 hot-spot in ONE kernel
+# ----------------------------------------------------------------------
+def _spmm_fused_kernel(block_cols_ref,    # scalar-prefetch (nrb, K)
+                       row_k_ref,         # scalar-prefetch (nrb,)
+                       blocks_ref,        # (1, 1, B, B) VMEM
+                       x_ref,             # (B, D)  VMEM — one col-block
+                       w_ref,             # (D, Fb) VMEM — resident
+                       b_ref,             # (1, Fb) fp32 VMEM — resident
+                       o_ref,             # (B, Fb) VMEM
+                       acc_ref):          # (B, Fb) fp32 VMEM scratch
+    """One grid step of y = Â·(XW + 1bᵀ): the needed (B, D) column
+    block of X is DMA'd in (index driven by the prefetched block_cols),
+    multiplied by the VMEM-resident W tile (fp32 accumulation), bias
+    added, the result cast to the operand dtype — exactly the unfused
+    `(XW + b).astype(cd)` contract — and aggregated into the fp32
+    accumulator by the Â tile. Slots past row_k[i] are skipped (exact:
+    dead slots hold zero tiles) and their DMAs elided by the clamped
+    index maps."""
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < row_k_ref[i])
+    def _accumulate():
+        x = x_ref[...]
+        xw = jax.lax.dot_general(
+            x, w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        # the unfused path computes (XW + b).astype(cd) between the two
+        # matmuls — reproduce that cast so fused ≡ unfused in BOTH
+        # precision policies, then aggregate with fp32 accumulation
+        xw = (xw + b_ref[...]).astype(x.dtype)
+        if x.dtype == jnp.float32:
+            a = blocks_ref[0, 0].astype(jnp.float32)
+        else:
+            a = blocks_ref[0, 0].astype(x.dtype)
+        acc_ref[...] += jax.lax.dot_general(
+            a, xw, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def spmm_fused_block_ell(blocks: jnp.ndarray, block_cols: jnp.ndarray,
+                         x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                         *, row_k: jnp.ndarray | None = None,
+                         block_f: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """y = A @ (x @ w + b) in one Pallas pass. Returns (nrb*B, F).
+
+    Grid (nrb, F/Fb, K): W is resident in VMEM per F-tile, the needed X
+    column block is DMA'd per K step (scalar-prefetched block_cols), XW
+    and the aggregation both accumulate fp32. `row_k` early-outs the K
+    loop past each row-block's true occupancy. F not a multiple of
+    `block_f` is zero-padded in and sliced out; D (x's width) is
+    consumed whole per block, so any layer width works."""
+    nrb, K, B, B2 = blocks.shape
+    assert B == B2, "square blocks"
+    n_cols, D = x.shape
+    assert n_cols % B == 0, "x rows must be multiple of block size"
+    D2, F = w.shape
+    assert D == D2, "x/w contraction dims must agree"
+    if K == 0:
+        return jnp.zeros((nrb * B, F), x.dtype)
+    Fp = ((F + block_f - 1) // block_f) * block_f
+    if Fp != F:
+        w = jnp.pad(w, ((0, 0), (0, Fp - F)))
+        b = jnp.pad(b, ((0, Fp - F),))
+    nf = Fp // block_f
+    if row_k is None:
+        row_k = jnp.full((nrb,), K, jnp.int32)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(nrb, nf, K),
         in_specs=[
-            pl.BlockSpec((1, 1, B, B), lambda i, j, k, bc: (i, k, 0, 0)),
-            pl.BlockSpec((B, block_f), lambda i, j, k, bc: (bc[i, k], j)),
+            pl.BlockSpec(
+                (1, 1, B, B),
+                lambda i, j, k, bc, rk: (i, _clamp_slot(k, rk[i]), 0, 0)),
+            pl.BlockSpec(
+                (B, D),
+                lambda i, j, k, bc, rk: (bc[i, _clamp_slot(k, rk[i])], 0)),
+            pl.BlockSpec((D, block_f), lambda i, j, k, bc, rk: (0, j)),
+            pl.BlockSpec((1, block_f), lambda i, j, k, bc, rk: (0, j)),
         ],
-        out_specs=pl.BlockSpec((B, block_f), lambda i, j, k, bc: (i, j)),
+        out_specs=pl.BlockSpec((B, block_f),
+                               lambda i, j, k, bc, rk: (i, j)),
         scratch_shapes=[pltpu.VMEM((B, block_f), jnp.float32)],
     )
     fn = pl.pallas_call(
-        _spmm_kernel,
+        _spmm_fused_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nrb * B, Fp), x.dtype),
         interpret=interpret,
-        name="block_ell_spmm",
+        name="block_ell_spmm_fused",
     )
-    out = fn(block_cols.astype(jnp.int32), blocks, x)
+    out = fn(block_cols.astype(jnp.int32), row_k.astype(jnp.int32),
+             blocks, x, w, b.astype(jnp.float32).reshape(1, Fp))
     return out[:, :F] if Fp != F else out
 
 
 # ----------------------------------------------------------------------
 # differentiable product
 # ----------------------------------------------------------------------
-def _apply(impl: str, blocks, block_cols, x, block_f: int):
+def _apply(impl: str, blocks, block_cols, x, block_f: int, row_k=None):
     """One block-ELL product via the resolved backend. Under a bf16
     compute policy (x is bf16) the value tiles are cast down HERE — once,
     outside the kernel — so the kernel streams half the tile bytes; the
     fp32 accumulator inside the kernels is unconditional. The backward
     pass re-enters through this same function on the transposed tiles
-    with the cotangent's dtype, so fwd and bwd share one contract."""
+    with the cotangent's dtype, so fwd and bwd share one contract.
+    `row_k` feeds the K-specialized kernel variant; the pure-XLA 'ref'
+    oracle deliberately ignores it (it multiplies every slot), which is
+    what makes it a differential oracle for the specialization."""
     if (x.dtype != jnp.float32
             and jnp.issubdtype(x.dtype, jnp.floating)
             and blocks.dtype != x.dtype):
@@ -175,7 +380,8 @@ def _apply(impl: str, blocks, block_cols, x, block_f: int):
     if impl == "ref":
         from repro.kernels.ref import spmm_block_ell_ref
         return spmm_block_ell_ref(blocks, block_cols, x)
-    return spmm_block_ell(blocks, block_cols, x, block_f=block_f,
+    return spmm_block_ell(blocks, block_cols, x, row_k=row_k,
+                          block_f=block_f,
                           interpret=(impl == "interpret"))
 
 
@@ -189,18 +395,21 @@ def _zero_cotangent(t):
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _spmm_ell(impl: str, block_f: int, adj: BlockEllAdj,
               x: jnp.ndarray) -> jnp.ndarray:
-    return _apply(impl, adj.blocks, adj.block_cols, x, block_f)
+    return _apply(impl, adj.blocks, adj.block_cols, x, block_f,
+                  row_k=adj.row_k)
 
 
 def _spmm_ell_fwd(impl, block_f, adj, x):
-    y = _apply(impl, adj.blocks, adj.block_cols, x, block_f)
+    y = _apply(impl, adj.blocks, adj.block_cols, x, block_f,
+               row_k=adj.row_k)
     return y, adj
 
 
 def _spmm_ell_bwd(impl, block_f, adj, g):
     # dx = Âᵀ ḡ via the transposed block-ELL tiles; the adjacency is data
     # (never a parameter) so its cotangent is (symbolically) zero.
-    dx = _apply(impl, adj.blocks_t, adj.block_cols_t, g, block_f)
+    dx = _apply(impl, adj.blocks_t, adj.block_cols_t, g, block_f,
+                row_k=adj.row_k_t)
     d_adj = jax.tree_util.tree_map(_zero_cotangent, adj)
     return d_adj, dx
 
@@ -217,3 +426,91 @@ def spmm_ell(adj: BlockEllAdj, x: jnp.ndarray, *, impl: str = "ref",
     flow through the custom VJP (Âᵀ product); Â itself gets zeros.
     """
     return _spmm_ell(impl, block_f, adj, x)
+
+
+# ----------------------------------------------------------------------
+# differentiable fused Â·(XW + b)
+# ----------------------------------------------------------------------
+def _fused_apply(impl: str, adj: BlockEllAdj, x, w, b, block_f: int):
+    """Primal of the fused product via the resolved backend. Precision
+    contract mirrors `gcn_forward`'s unfused layer math exactly:
+    operands in x's dtype (W is cast down HERE under a bf16 policy, the
+    bias stays fp32 and is added to the fp32 XW accumulator), fp32
+    accumulation throughout, output in x's dtype — so in fp32 the fused
+    'ref' path is bitwise what the unfused path computes."""
+    cd = x.dtype
+    if (cd != jnp.float32 and jnp.issubdtype(cd, jnp.floating)
+            and w.dtype != cd):
+        w = w.astype(cd)
+    blocks = adj.blocks
+    if (cd != jnp.float32 and jnp.issubdtype(cd, jnp.floating)
+            and blocks.dtype != cd):
+        blocks = blocks.astype(cd)
+    if blocks.shape[1] == 0:          # K = 0: identically-zero product
+        return jnp.zeros((blocks.shape[0] * blocks.shape[2], w.shape[1]),
+                         cd)
+    if impl == "ref":
+        from repro.kernels.ref import spmm_fused_ref
+        return spmm_fused_ref(blocks, adj.block_cols, x, w, b)
+    bvec = (jnp.zeros((w.shape[1],), jnp.float32) if b is None
+            else b.astype(jnp.float32))
+    return spmm_fused_block_ell(blocks, adj.block_cols, x, w, bvec,
+                                row_k=adj.row_k, block_f=block_f,
+                                interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _spmm_fused(impl: str, block_f: int, adj: BlockEllAdj,
+                x: jnp.ndarray, w: jnp.ndarray, b) -> jnp.ndarray:
+    return _fused_apply(impl, adj, x, w, b, block_f)
+
+
+def _spmm_fused_fwd(impl, block_f, adj, x, w, b):
+    y = _fused_apply(impl, adj, x, w, b, block_f)
+    return y, (adj, x, w, b)
+
+
+def _spmm_fused_bwd(impl, block_f, res, g):
+    # y = Â (XW + 1bᵀ). With g̃ = Âᵀ ḡ (the SAME transposed-tile spmm the
+    # unfused VJP uses, row_k_t-specialized):
+    #   dX = g̃ Wᵀ      dW = Xᵀ g̃      db = g̃ᵀ 1      dÂ ≡ 0 (data)
+    # Operand dtypes follow the compute policy (x's dtype), contractions
+    # accumulate fp32, and parameter grads are cast back to the
+    # parameters' storage dtype (fp32 under both policies).
+    adj, x, w, b = res
+    gt = _apply(impl, adj.blocks_t, adj.block_cols_t, g, block_f,
+                row_k=adj.row_k_t)
+    cd = x.dtype
+    wc = w.astype(cd) if (jnp.issubdtype(cd, jnp.floating)
+                          and w.dtype != cd) else w
+    dx = jax.lax.dot_general(
+        gt, wc, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(cd)
+    dw = jax.lax.dot_general(
+        x, gt, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(w.dtype)
+    db = (None if b is None
+          else gt.astype(jnp.float32).sum(axis=0).astype(b.dtype))
+    d_adj = jax.tree_util.tree_map(_zero_cotangent, adj)
+    return d_adj, dx, dw, db
+
+
+_spmm_fused.defvjp(_spmm_fused_fwd, _spmm_fused_bwd)
+
+
+def spmm_fused(adj: BlockEllAdj, x: jnp.ndarray, w: jnp.ndarray,
+               b: jnp.ndarray | None = None, *, impl: str = "ref",
+               block_f: int = 128) -> jnp.ndarray:
+    """Differentiable y = Â (X W + 1 bᵀ) in one fused pass.
+
+    The paper's eq. 8 hot-spot without the intermediate HBM round-trip:
+    the unfused path materializes XW to HBM and the aggregation re-reads
+    it; here one kernel holds W resident in VMEM, streams the needed X
+    column blocks, and aggregates through the fp32 accumulator, with the
+    K loop early-outing past each row-block's `row_k` occupancy.
+
+    impl: 'pallas' | 'interpret' | 'ref' — same tiering as `spmm_ell`.
+    Gradients flow to x, w and b through the custom VJP (whose backward
+    reuses the transposed-tile spmm); Â itself gets zeros.
+    """
+    return _spmm_fused(impl, block_f, adj, x, w, b)

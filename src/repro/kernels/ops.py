@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref as _ref
-from repro.kernels.block_spmm import BlockEllAdj, spmm_block_ell, spmm_ell
+from repro.kernels.block_spmm import (BlockEllAdj, spmm_block_ell,
+                                      spmm_ell, spmm_fused)
 from repro.kernels.flash_attention import flash_attention
 
 Mode = Literal["auto", "pallas", "interpret", "ref", "blocked"]
@@ -92,6 +93,10 @@ class TileBufferPool:
         w = ring["written"][i]
         if w is None:
             buf[:] = 0                  # unknown writes: full re-zero
+        elif isinstance(w, tuple):      # ("rows", idx, span) — mark_rows
+            _, idx, span = w
+            if len(idx):
+                buf.reshape(-1, span)[idx] = 0
         elif len(w):
             buf[w] = 0                  # sparse re-zero of what was used
         ring["written"][i] = None
@@ -105,12 +110,28 @@ class TileBufferPool:
             key, i = slot
             self._rings[key]["written"][i] = flat_indices
 
+    def mark_rows(self, buf: np.ndarray, row_indices: np.ndarray,
+                  span: int) -> None:
+        """Record whole written ROWS of `buf` viewed as (-1, span) — the
+        shape of whole-tile writes (block_ell_transpose stores B·B tiles
+        per slot), where per-element flat indices would cost more than
+        they save. Recycle re-zeros `buf.reshape(-1, span)[rows]`.
+        No-op for foreign buffers."""
+        slot = self._slots.get(id(buf))
+        if slot is not None:
+            key, i = slot
+            self._rings[key]["written"][i] = \
+                ("rows", np.asarray(row_indices), int(span))
+
 
 def block_ell_from_dense(adj: np.ndarray, block: int = 128,
-                         k_slots: int | None = None):
+                         k_slots: int | None = None,
+                         with_row_k: bool = False):
     """Tile a dense (n, m) matrix into block-ELL. Returns (blocks,
     block_cols) with shapes ((nrb, K, B, B), (nrb, K)); rows padded up to a
-    block multiple. Empty slots carry a zero tile pointing at col-block 0."""
+    block multiple. Empty slots carry a zero tile pointing at col-block 0.
+    `with_row_k=True` appends the (nrb,) int32 per-row-block occupancy
+    (the K-specialization map) as a third element."""
     n, m = adj.shape
     B = block
     nrb, ncb = -(-n // B), -(-m // B)
@@ -129,13 +150,16 @@ def block_ell_from_dense(adj: np.ndarray, block: int = 128,
         cbs = np.where(nz[i])[0]
         blocks[i, :len(cbs)] = tiles[i, cbs]
         cols[i, :len(cbs)] = cbs
+    if with_row_k:
+        return blocks, cols, nz.sum(1).astype(np.int32)
     return blocks, cols
 
 
 def _block_ell_from_coo(rows, cols, data, nrb: int, ncb: int, block: int,
                         k_slots: int | None = None,
                         dtype=np.float32,
-                        assume_unique: bool | None = None):
+                        assume_unique: bool | None = None,
+                        pool=None, with_row_k: bool = False):
     """Vectorized block-ELL assembly from COO coordinates (the
     `block_ell_from_csr` core; `block_ell_adj_from_csr` fuses two of
     these sharing the O(nnz) passes). Pure bincount/cumsum/scatter, no
@@ -164,8 +188,12 @@ def _block_ell_from_coo(rows, cols, data, nrb: int, ncb: int, block: int,
     if assume_unique is None:
         assume_unique = not _has_duplicate_coords(rows, cols,
                                                   np.int64(ncb) * B)
-    return _scatter_tiles(present, rb, cb, rlo, clo, data, K, B,
-                          assume_unique, dtype)
+    blocks, cols_arr = _scatter_tiles(present, rb, cb, rlo, clo, data,
+                                      K, B, assume_unique, dtype,
+                                      pool=pool)
+    if with_row_k:
+        return blocks, cols_arr, present.sum(1).astype(np.int32)
+    return blocks, cols_arr
 
 
 def _scatter_tiles(present, rb, cb, rlo, clo, data, K: int, B: int,
@@ -254,18 +282,23 @@ def _has_duplicate_coords(rows, cols, col_span) -> bool:
 
 def block_ell_from_csr(indptr, indices, data, n_cols: int, block: int = 128,
                        k_slots: int | None = None,
-                       n_rows: int | None = None):
+                       n_rows: int | None = None,
+                       pool=None, with_row_k: bool = False):
     """Block-ELL from CSR without densifying the full matrix (full-graph
     inference path). Memory ~ nnz-blocks · B². `n_rows` pads the row dim
     beyond len(indptr)-1 (fixed-shape cluster batches). Vectorized
     (argsort/bincount) — this runs per batch per epoch, so it must stay
     off the training critical path; `block_ell_from_csr_ref` is the
-    loop-based oracle it bit-matches."""
+    loop-based oracle it bit-matches. `pool` (TileBufferPool) sources
+    the tile buffers from the reuse ring instead of a fresh K·B²
+    zero-fill — bit-identical output. `with_row_k=True` appends the
+    (nrb,) int32 per-row-block occupancy as a third element."""
     n = len(indptr) - 1
     B = block
     nrb, ncb = -(-max(n, n_rows or 0) // B), -(-n_cols // B)
     rows = _expand_rows(indptr)
-    return _block_ell_from_coo(rows, indices, data, nrb, ncb, B, k_slots)
+    return _block_ell_from_coo(rows, indices, data, nrb, ncb, B, k_slots,
+                               pool=pool, with_row_k=with_row_k)
 
 
 def block_ell_needed_k(indptr, indices, block: int, n_cols: int,
@@ -287,14 +320,20 @@ def block_ell_needed_k(indptr, indices, block: int, n_cols: int,
 
 
 def block_ell_transpose(blocks: np.ndarray, block_cols: np.ndarray,
-                        n_col_blocks: int, k_slots: int | None = None):
+                        n_col_blocks: int, k_slots: int | None = None,
+                        pool=None, with_row_k: bool = False):
     """Host-side transpose of a block-ELL matrix: tile (i, →c) becomes
     tile (c, →i) transposed. All-zero tiles (ELL padding slots) are
     skipped so padding never inflates the transposed K. Duplicate
     (row, col) tiles accumulate — the spmm sums over slots, so this stays
     lossless. Raises if an explicit k_slots would drop a non-zero tile.
     Vectorized: one fused any() over tiles + a stable argsort by column
-    block; `block_ell_transpose_ref` is the loop oracle it bit-matches."""
+    block; `block_ell_transpose_ref` is the loop oracle it bit-matches.
+    `pool` (TileBufferPool) sources the transposed tile buffers from the
+    reuse ring — whole-tile writes are reported via `mark_rows`, so the
+    recycle re-zeros one (B, B) row span per written slot instead of the
+    full K_t·B² fill. `with_row_k=True` appends the (ncb,) int32
+    occupancy of the transposed tiles as a third element."""
     blocks = np.asarray(blocks)
     block_cols = np.asarray(block_cols)
     nrb, K, B, _ = blocks.shape
@@ -310,8 +349,15 @@ def block_ell_transpose(blocks: np.ndarray, block_cols: np.ndarray,
         raise ValueError(
             f"k_slots={K_t} drops non-zero transposed tiles "
             f"(need {int(counts.max())})")
-    blocks_t = np.zeros((ncb, K_t, B, B), blocks.dtype)
-    cols_t = np.zeros((ncb, K_t), np.int32)
+    if pool is None:
+        blocks_t = np.zeros((ncb, K_t, B, B), blocks.dtype)
+        cols_t = np.zeros((ncb, K_t), np.int32)
+        bt_flat = ct_flat = None
+    else:
+        bt_flat = pool.zeros(ncb * K_t * B * B, blocks.dtype)
+        ct_flat = pool.zeros(ncb * K_t, np.int32)
+        blocks_t = bt_flat.reshape(ncb, K_t, B, B)
+        cols_t = ct_flat.reshape(ncb, K_t)
     if len(c_arr):
         order = np.argsort(c_arr, kind="stable")  # keep (i, k) order per c
         cs = c_arr[order]
@@ -321,6 +367,16 @@ def block_ell_transpose(blocks: np.ndarray, block_cols: np.ndarray,
         blocks_t[cs, slot] = blocks[i_arr[order], k_arr[order]] \
             .transpose(0, 2, 1)
         cols_t[cs, slot] = i_arr[order].astype(np.int32)
+        if pool is not None:
+            written = cs * K_t + slot
+            pool.mark_rows(bt_flat, written, B * B)
+            pool.mark(ct_flat, written)
+    elif pool is not None:
+        empty = np.empty(0, np.int64)
+        pool.mark(bt_flat, empty)
+        pool.mark(ct_flat, empty)
+    if with_row_k:
+        return blocks_t, cols_t, counts.astype(np.int32)
     return blocks_t, cols_t
 
 
@@ -405,12 +461,15 @@ def block_ell_adj_from_dense(adj: np.ndarray, block: int = 128,
     """BlockEllAdj (forward + transposed tiles) from a dense matrix.
     Leaves stay host-side numpy — like every other ClusterBatch field —
     so the epoch loop never round-trips them through the device."""
-    blocks, cols = block_ell_from_dense(adj, block, k_slots)
+    blocks, cols, row_k = block_ell_from_dense(adj, block, k_slots,
+                                               with_row_k=True)
     ncb = -(-adj.shape[1] // block)
     kt = k_slots_t if k_slots_t is not None else k_slots
-    blocks_t, cols_t = block_ell_transpose(blocks, cols, ncb, kt)
+    blocks_t, cols_t, row_k_t = block_ell_transpose(blocks, cols, ncb, kt,
+                                                    with_row_k=True)
     return BlockEllAdj(blocks=blocks, block_cols=cols,
-                       blocks_t=blocks_t, block_cols_t=cols_t)
+                       blocks_t=blocks_t, block_cols_t=cols_t,
+                       row_k=row_k, row_k_t=row_k_t)
 
 
 def block_ell_adj_from_csr(indptr, indices, data, n_cols: int,
@@ -470,8 +529,12 @@ def block_ell_adj_from_csr(indptr, indices, data, n_cols: int,
                                   uniq_coords, pool=pool)
     blocks_t, cols_t = _scatter_tiles(present.T, cb, rb, clo, rlo, data,
                                       Kt, B, uniq_coords, pool=pool)
+    # the occupancy bincount computed above IS the K-specialization map —
+    # per-row-block live slots forward, per-col-block for the transpose
     return BlockEllAdj(blocks=blocks, block_cols=cols,
-                       blocks_t=blocks_t, block_cols_t=cols_t)
+                       blocks_t=blocks_t, block_cols_t=cols_t,
+                       row_k=present.sum(1).astype(np.int32),
+                       row_k_t=present.sum(0).astype(np.int32))
 
 
 # ----------------------------------------------------------------------
@@ -505,7 +568,7 @@ def spmm(adj, x: jnp.ndarray, *, mode: Mode = "auto",
         cotangent for the adjacency is a symbolic zero — Â is training
         DATA here, not a parameter.
       * vmap/shard_map: both paths broadcast over leading batch dims
-        (BlockEllAdj's four leaves are plain data, so stacked batches
+        (BlockEllAdj's leaves are plain data, so stacked batches
         vmap like any array pytree — this is what the DP step relies
         on).
     Every ClusterBatch payload (cluster or SAINT sampler, dense or
@@ -521,6 +584,36 @@ def spmm_dense(adj: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     (bitwise-identical to the plain `adj @ x` when everything is fp32)."""
     return jnp.matmul(adj.astype(x.dtype), x,
                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def spmm_xw(adj, x: jnp.ndarray, w: jnp.ndarray,
+            b: jnp.ndarray | None = None, *, mode: Mode = "auto",
+            block_f: int = 128) -> jnp.ndarray:
+    """Adjacency-polymorphic fused y = Â (X W + 1 bᵀ) — the seam
+    `gcn_forward` dispatches a layer's propagation through when
+    `model.fuse_spmm` is on.
+
+    Same contract as `spmm` with the dense XW folded in:
+      * dense `adj` runs the exact unfused layer math — XW in x's dtype
+        with an fp32 accumulator, fp32 bias add, cast to x's dtype, then
+        `spmm_dense` — so flipping the knob on a dense batch is a no-op
+        by construction;
+      * `BlockEllAdj` routes to the fused block-ELL kernel (`spmm_fused`:
+        one pass, W resident in VMEM, row_k-specialized K loop, custom
+        VJP whose backward reuses the transposed-tile spmm);
+      * gradients flow to x, w and b on both paths; the adjacency's
+        cotangent is zero on the sparse path (training data, not a
+        parameter)."""
+    if isinstance(adj, BlockEllAdj):
+        return spmm_fused(adj, x, w, b, impl=_resolve_spmm(mode),
+                          block_f=block_f)
+    cd = x.dtype
+    if jnp.issubdtype(cd, jnp.floating) and w.dtype != cd:
+        w = w.astype(cd)
+    z = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        z = z + b
+    return spmm_dense(adj, z.astype(cd))
 
 
 # ----------------------------------------------------------------------

@@ -35,6 +35,27 @@ def spmm_block_ell_ref(blocks: jnp.ndarray, block_cols: jnp.ndarray,
     return y.reshape(nrb * B, F).astype(x.dtype)
 
 
+def spmm_fused_ref(blocks: jnp.ndarray, block_cols: jnp.ndarray,
+                   x: jnp.ndarray, w: jnp.ndarray,
+                   b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Oracle for the fused y = Â (X W + 1 bᵀ) kernel.
+
+    Same math contract as the fused Pallas kernel AND the unfused
+    gcn_forward layer: XW in the operand dtype with an fp32 accumulator,
+    fp32 bias add, cast back to x's dtype, then the block-ELL
+    aggregation. Deliberately ignores `row_k` (it multiplies every slot,
+    padding tiles included) — that makes it the differential oracle for
+    the K specialization, which must be value-identical."""
+    op_dtype = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) \
+        else jnp.float32
+    xw = jax.lax.dot_general(x.astype(op_dtype), w.astype(op_dtype),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    if b is not None:
+        xw = xw + b.astype(jnp.float32)
+    return spmm_block_ell_ref(blocks, block_cols, xw.astype(x.dtype))
+
+
 def dense_from_block_ell(blocks: np.ndarray, block_cols: np.ndarray,
                          n_cols: int) -> np.ndarray:
     """Reconstruct the dense matrix (testing only)."""

@@ -1,0 +1,103 @@
+"""`hypothesis` when installed, a deterministic fallback otherwise.
+
+The property tests used to `pytest.importorskip("hypothesis")`, which
+silently dropped the whole sweep on environments without the optional
+dep — coverage that LOOKED green was never run. Importing `given` /
+`settings` / `strategies` from here instead keeps the sweeps running
+everywhere: with hypothesis installed you get the real engine
+(shrinking, edge-case heuristics, example database); without it, a
+seeded pseudo-random driver runs the same `max_examples` count, with
+the FIRST example pinned to each strategy's minimal value (0-size /
+min-bound draws — the edge cases hypothesis would try first). The
+fallback loses shrinking, never coverage — and CI always installs the
+real engine (`.[test]`), enforced by the REPRO_FORBID_OPTIONAL_SKIPS
+gate in conftest.py.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import random
+
+    _DEFAULT_EXAMPLES = 20
+    _SEED = 0x5EED
+
+    class _Strategy:
+        """Minimal strategy protocol: `generate(rng)` draws one value;
+        `minimal(rng)` draws the shrink-target (edge) value."""
+
+        def __init__(self, gen, minimal=None):
+            self._gen = gen
+            self._min = minimal
+
+        def generate(self, rng):
+            return self._gen(rng)
+
+        def minimal(self, rng):
+            return self._gen(rng) if self._min is None else self._min()
+
+    class strategies:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value=-(2 ** 31), max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             minimal=lambda: min_value)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_ignored):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                             minimal=lambda: min_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))],
+                             minimal=lambda: seq[0])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5,
+                             minimal=lambda: False)
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                def gen(rng):
+                    return fn(lambda s: s.generate(rng), *args, **kwargs)
+
+                def mini():
+                    # propagate minimality into the composite's draws
+                    rng = random.Random(_SEED)
+                    return fn(lambda s: s.minimal(rng), *args, **kwargs)
+
+                return _Strategy(gen, minimal=mini)
+            return build
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            def runner():
+                n = getattr(runner, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(_SEED)
+                for i in range(n):
+                    draw = (lambda s: s.minimal(rng)) if i == 0 \
+                        else (lambda s: s.generate(rng))
+                    args = [draw(s) for s in arg_strategies]
+                    kwargs = {k: draw(s) for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+            # identity only — NOT functools.wraps: copying __wrapped__
+            # would make pytest read the property's parameters off the
+            # original signature and hunt for same-named fixtures
+            for attr in ("__name__", "__qualname__", "__module__",
+                         "__doc__"):
+                setattr(runner, attr, getattr(fn, attr))
+            runner._hypothesis_fallback = True
+            return runner
+        return decorate
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate

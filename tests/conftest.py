@@ -13,6 +13,39 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 # (an explicit PYTHONPATH=src also works and is what subprocess tests use).
 _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, _SRC)
+# tests/ itself too, so `from _hypothesis_compat import ...` resolves no
+# matter how pytest was invoked (rootdir insertion normally covers it)
+sys.path.insert(0, os.path.abspath(os.path.dirname(__file__)))
+
+
+# ----------------------------------------------------------------------
+# optional-dep skip gate: with REPRO_FORBID_OPTIONAL_SKIPS set (the CI
+# fast lane exports it), any test that SKIPS because an optional import
+# is missing fails the session — skipped coverage must be visible, never
+# silently green. Local runs without the env var keep plain skips.
+# ----------------------------------------------------------------------
+_OPTIONAL_SKIP_MARKERS = ("not installed", "no module named",
+                          "could not import")
+_forbidden_skips: list = []
+
+
+def pytest_runtest_logreport(report):
+    if not (report.skipped
+            and os.environ.get("REPRO_FORBID_OPTIONAL_SKIPS")):
+        return
+    reason = (report.longrepr[2] if isinstance(report.longrepr, tuple)
+              else str(report.longrepr))
+    if any(m in reason.lower() for m in _OPTIONAL_SKIP_MARKERS):
+        _forbidden_skips.append(f"{report.nodeid}: {reason}")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _forbidden_skips:
+        print("\nREPRO_FORBID_OPTIONAL_SKIPS: tests skipped on a missing "
+              "optional dependency (install the '.[test]' extra):")
+        for line in _forbidden_skips:
+            print("  " + line)
+        session.exitstatus = 1
 
 
 @pytest.fixture(scope="session", autouse=True)

@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # test-only dep; skip, never hard-error
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.models.gla import causal_conv, gla_chunked, gla_step
 

@@ -1,8 +1,7 @@
 """CSR graph ops, normalization variants, cluster batching invariants."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # test-only dep; skip, never hard-error
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import ClusterBatcher, label_entropy_per_cluster
 from repro.graph import (CSRGraph, make_dataset, metis_like_partition,

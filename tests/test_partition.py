@@ -1,8 +1,7 @@
 """Partitioner invariants (hypothesis) + quality vs random baseline."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # test-only dep; skip, never hard-error
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.graph import (SBMSpec, edge_cut, make_dataset,
                          metis_like_partition, partition_graph,

@@ -5,8 +5,9 @@ tiles (never a dense Â), so every case checks the custom-VJP gradient of
 the Pallas kernel (interpret mode on CPU) against plain jax autodiff
 through a dense-adjacency matmul: block structures, fp32/bf16, ragged
 (non-block-multiple) shapes, non-divisible F, and the K=0 empty-slot
-edge case. A hypothesis sweep widens the structure coverage when the dep
-is installed (CI); the parametrized cases always run."""
+edge case. A property sweep widens the structure coverage — via the
+real hypothesis engine when installed (CI), via the deterministic
+_hypothesis_compat fallback otherwise, so it never silently skips."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,11 +17,7 @@ from repro.kernels import (BlockEllAdj, block_ell_adj_from_dense,
                            block_ell_transpose, spmm_ell)
 from repro.kernels.ref import dense_from_block_ell
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:          # test-only dep; skip, never hard-error
-    HAVE_HYPOTHESIS = False
+from _hypothesis_compat import given, settings, strategies as st
 
 
 def _block_sparse(rng, n, m, B, density, dtype=np.float32):
@@ -143,21 +140,16 @@ def test_transpose_rejects_lossy_k_slots():
         block_ell_transpose(blocks, cols, 2, k_slots=1)
 
 
-if HAVE_HYPOTHESIS:
-    @settings(max_examples=15, deadline=None)
-    @given(nrb=st.integers(1, 4), ncb=st.integers(1, 4),
-           B=st.sampled_from([8, 16]), F=st.integers(1, 20),
-           density=st.floats(0.0, 1.0), seed=st.integers(0, 2**16),
-           raggedr=st.integers(0, 7), raggedc=st.integers(0, 7))
-    def test_custom_vjp_hypothesis_sweep(nrb, ncb, B, F, density, seed,
-                                         raggedr, raggedc):
-        rng = np.random.default_rng(seed)
-        n = max(1, nrb * B - raggedr)
-        m = max(1, ncb * B - raggedc)
-        dense = _block_sparse(rng, n, m, B, density)
-        _check_grad_matches_dense(dense, B, F, jnp.float32, "interpret",
-                                  1e-3, seed=seed)
-else:
-    @pytest.mark.skip(reason="hypothesis not installed")
-    def test_custom_vjp_hypothesis_sweep():
-        pass
+@settings(max_examples=15, deadline=None)
+@given(nrb=st.integers(1, 4), ncb=st.integers(1, 4),
+       B=st.sampled_from([8, 16]), F=st.integers(1, 20),
+       density=st.floats(0.0, 1.0), seed=st.integers(0, 2**16),
+       raggedr=st.integers(0, 7), raggedc=st.integers(0, 7))
+def test_custom_vjp_hypothesis_sweep(nrb, ncb, B, F, density, seed,
+                                     raggedr, raggedc):
+    rng = np.random.default_rng(seed)
+    n = max(1, nrb * B - raggedr)
+    m = max(1, ncb * B - raggedc)
+    dense = _block_sparse(rng, n, m, B, density)
+    _check_grad_matches_dense(dense, B, F, jnp.float32, "interpret",
+                              1e-3, seed=seed)

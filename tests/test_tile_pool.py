@@ -82,6 +82,53 @@ def test_main_thread_probes_during_prefetch_are_safe():
                                   f"trial {trial} batch {i}")
 
 
+def test_pooled_builders_bit_match_ref_across_recycling():
+    """Builder-reuse stress: `block_ell_from_csr(pool=...)` and
+    `block_ell_transpose(pool=...)` must stay BITWISE equal to the
+    loop-based `*_ref` oracles across many rounds of ring recycling.
+    Shapes are held constant so every round recycles the same rings, and
+    density alternates dense→sparse so any slot the partial re-zero
+    (`mark` / `mark_rows` spans) failed to erase shows up as a stale
+    non-zero tile from an earlier, denser round."""
+    from repro.kernels.ops import (TileBufferPool, block_ell_from_csr,
+                                   block_ell_from_csr_ref,
+                                   block_ell_transpose,
+                                   block_ell_transpose_ref)
+    pool = TileBufferPool(depth=4)
+    rng = np.random.default_rng(0)
+    n, B, K = 48, 8, 6            # fixed shapes → fixed rings
+    rounds = 3 * pool.depth + 1   # well past one full recycle
+    for r in range(rounds):
+        density = 0.9 if r % 2 == 0 else 0.15
+        dense = (rng.random((n, n)) < density) * \
+            rng.standard_normal((n, n)).astype(np.float32)
+        # dense → CSR by hand (row-major nonzero order)
+        ri, ci = np.nonzero(dense)
+        indptr = np.concatenate(
+            [[0], np.cumsum(np.bincount(ri, minlength=n))]).astype(np.int64)
+        blk, cols, row_k = block_ell_from_csr(
+            indptr, ci, dense[ri, ci], n, block=B, k_slots=K,
+            pool=pool, with_row_k=True)
+        rblk, rcols = block_ell_from_csr_ref(indptr, ci, dense[ri, ci],
+                                             n, block=B, k_slots=K)
+        np.testing.assert_array_equal(blk, rblk,
+                                      err_msg=f"round {r}: stale tiles")
+        np.testing.assert_array_equal(cols, rcols, err_msg=f"round {r}")
+        occ = rblk.reshape(rblk.shape[0], K, -1).any(-1).sum(1)
+        np.testing.assert_array_equal(row_k, occ.astype(np.int32),
+                                      err_msg=f"round {r}: row_k")
+        tb, tc, row_k_t = block_ell_transpose(blk, cols, n // B,
+                                              k_slots=K, pool=pool,
+                                              with_row_k=True)
+        rtb, rtc = block_ell_transpose_ref(rblk, rcols, n // B, k_slots=K)
+        np.testing.assert_array_equal(tb, rtb,
+                                      err_msg=f"round {r}: stale t-tiles")
+        np.testing.assert_array_equal(tc, rtc, err_msg=f"round {r}")
+        occ_t = rtb.reshape(rtb.shape[0], K, -1).any(-1).sum(1)
+        np.testing.assert_array_equal(row_k_t, occ_t.astype(np.int32),
+                                      err_msg=f"round {r}: row_k_t")
+
+
 def test_engine_rejects_too_shallow_pool():
     from repro.core.experiment import build_experiment, preset
     spec = preset("ppi_tiny")
